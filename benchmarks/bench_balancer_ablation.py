@@ -1,0 +1,51 @@
+"""Balancer ablation (§4.3): Algorithm 1's predictive split vs fixed-ratio
+splits (25/50/75%) and the degenerate full-split (== disaggregated L-H).
+Shows the adaptive split is what buys Cronus its throughput."""
+from __future__ import annotations
+
+import copy
+import time
+
+from benchmarks.common import paper_trace
+from repro.configs import get_config
+from repro.core.balancer import Balancer
+from repro.core.cronus import build_cronus
+from repro.core.executor import NullExecutor
+from repro.core.predictor import profile_chunked, profile_prefill
+from repro.serving.hardware import A10, A100, DeviceModel
+
+
+class RatioBalancer:
+    def __init__(self, ratio: float):
+        self.ratio = ratio
+
+    def partial_prefill_length(self, l_in, stats):
+        return max(1, min(int(l_in * self.ratio), l_in))
+
+
+def run(n_requests: int = 500):
+    print("name,us_per_call,derived")
+    cfg = get_config("llama3-8b")
+    hi, lo = DeviceModel(A100, cfg), DeviceModel(A10, cfg)
+    reqs = paper_trace(n_requests)
+    variants = {
+        "alg1": Balancer(profile_prefill(lo), profile_chunked(hi)),
+        "fixed_25": RatioBalancer(0.25),
+        "fixed_50": RatioBalancer(0.50),
+        "fixed_75": RatioBalancer(0.75),
+        "full_split": RatioBalancer(1.0),     # == disaggregated L-H
+    }
+    for name, bal in variants.items():
+        t0 = time.time()
+        sys_c = build_cronus(cfg, lo, hi,
+                             executor_factory=lambda role: NullExecutor(),
+                             balancer=bal)
+        m = sys_c.run([copy.deepcopy(r) for r in reqs])
+        wall = (time.time() - t0) * 1e6 / n_requests
+        print(f"balancer_ablation/{name},{wall:.1f},"
+              f"tput={m['throughput']:.2f}req/s "
+              f"ttft_p99={m['ttft_p99']:.2f}s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 4: TTFT P99 and TBT P99 across approaches, fixed-interval
+arrivals. Two operating points: light load (every system unsaturated — the
+regime where disagg H-L shows the best possible TTFT) and near-saturation
+(~85% of Cronus max throughput — where Cronus' TTFT/TBT advantages over
+DP/PP express)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import PAPER_GRID, paper_trace
+from repro.configs import get_config
+from repro.serving.hardware import DEVICES
+from repro.serving.simulator import APPROACHES, run_approach
+
+
+def run(n_requests: int = 400):
+    print("name,us_per_call,derived")
+    for hi, lo, arch in PAPER_GRID[:2]:  # one per model (runtime budget)
+        cfg = get_config(arch)
+        for regime, rate in (("light", 1.0), ("near_sat", 6.0)):
+            reqs = paper_trace(n_requests, interval=1.0 / rate, seed=1)
+            for approach in APPROACHES:
+                t0 = time.time()
+                m = run_approach(approach, cfg, DEVICES[hi], DEVICES[lo], reqs)
+                wall = (time.time() - t0) * 1e6 / n_requests
+                print(f"fig4/{hi}+{lo}/{arch}/{regime}/{approach},{wall:.1f},"
+                      f"ttft_p99={m['ttft_p99']:.3f}s "
+                      f"tbt_p99={m['tbt_p99']*1000:.1f}ms "
+                      f"tput={m['throughput']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper §6 (Limitations): with short-input/long-output traces the CPI
+becomes decode-bound and Cronus load-balance breaks. The paper leaves the
+fix ("offloading some decode requests to the prefill node") as future
+work — we implement it (CronusSystem.decode_offload) and measure it here.
+
+FINDINGS (EXPERIMENTS.md §Perf-offload):
+  * unbounded offload (trigger = Alg. 1 fallback alone) inverts the system
+    into Disagg-H-L: 3.4 -> 0.17 req/s. REFUTED; policy now bounds offload
+    by the PPI's spare KV pool (max_offload_frac).
+  * bounded offload on A100+A10 is throughput-neutral-to-negative
+    (3.92 -> 3.85 req/s at CPI-saturating load): with a 4-5x decode-speed
+    gap the offloaded stragglers on the A10 set the tail. The paper's idea
+    pays only when the capability gap is small or the high-end side is
+    memory- (not bandwidth-) limited. Feature ships default-off."""
+from __future__ import annotations
+
+import copy
+import time
+
+from repro.configs import get_config
+from repro.core.balancer import Balancer
+from repro.core.cronus import build_cronus
+from repro.core.executor import NullExecutor
+from repro.core.predictor import profile_chunked, profile_prefill
+from repro.serving.hardware import A10, A100, DeviceModel
+from repro.serving.trace import make_trace
+
+
+def run(n_requests: int = 400):
+    print("name,us_per_call,derived")
+    cfg = get_config("llama3-8b")
+    hi, lo = DeviceModel(A100, cfg), DeviceModel(A10, cfg)
+    # decode-bound trace: short inputs, long outputs (inverts the paper's
+    # conversation statistics)
+    reqs = make_trace(n_requests, seed=2, interval=0.0,
+                      mean_in=150, mean_out=900, max_out=2048)
+    for name, offload in (("cronus", False), ("cronus+offload", True)):
+        bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+        t0 = time.time()
+        sys_c = build_cronus(cfg, lo, hi,
+                             executor_factory=lambda role: NullExecutor(),
+                             balancer=bal, decode_offload=offload)
+        m = sys_c.run([copy.deepcopy(r) for r in reqs])
+        wall = (time.time() - t0) * 1e6 / n_requests
+        n_ppi = len(sys_c.ppi.finished)
+        print(f"offload/{name},{wall:.1f},tput={m['throughput']:.2f}req/s "
+              f"tbt_p99={m['tbt_p99']*1000:.1f}ms "
+              f"finished_on_ppi={n_ppi}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json):
+per (arch x shape x mesh) compute/memory/collective terms + bottleneck.
+Falls back to a reduced in-line summary when artifacts are absent."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _load(results_dir):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        if path.endswith("summary.json"):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        out[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return out
+
+
+def run(results_dir: str = "results/dryrun",
+        baseline_dir: str = "results/dryrun_baseline"):
+    print("name,us_per_call,derived")
+    cur = _load(results_dir)
+    base = _load(baseline_dir) if os.path.isdir(baseline_dir) else {}
+    if not cur:
+        print("roofline/missing,0,run `python -m repro.launch.sweep` first")
+        return
+    n_ok = 0
+    for key, r in sorted(cur.items()):
+        tag = "/".join(str(k) for k in key)
+        if r.get("status") != "ok":
+            print(f"roofline/{tag},0,FAILED {r.get('error')}")
+            continue
+        n_ok += 1
+        extra = ""
+        b = base.get(key)
+        if b and b.get("status") == "ok":
+            tot_b = b["t_compute"] + b["t_memory"] + b["t_collective"]
+            tot_c = r["t_compute"] + r["t_memory"] + r["t_collective"]
+            if tot_c > 0:
+                extra = f" vs_baseline={tot_b/tot_c:.2f}x"
+        print(f"roofline/{tag},{r.get('t_compile_s', 0)*1e6:.0f},"
+              f"compute={r['t_compute']*1e3:.3f}ms "
+              f"memory={r['t_memory']*1e3:.3f}ms "
+              f"collective={r['t_collective']*1e3:.3f}ms "
+              f"bound={r['bottleneck']} "
+              f"useful_flops={r.get('useful_flops_ratio', float('nan')):.3f}"
+              f"{extra}")
+    print(f"roofline/summary,0,{n_ok}/{len(cur)} ok")
+
+
+if __name__ == "__main__":
+    run()

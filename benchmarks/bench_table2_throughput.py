@@ -1,0 +1,39 @@
+"""Paper Table 2: max throughput (req/s) of 5 approaches x 4 (hw, model)
+combos. All requests sent at t=0 (the paper's measurement mode)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import PAPER_GRID, PAPER_TABLE2, paper_trace
+from repro.configs import get_config
+from repro.serving.hardware import DEVICES
+from repro.serving.simulator import APPROACHES, run_approach
+
+
+def run(n_requests: int = 600):
+    print("name,us_per_call,derived")
+    rows = {}
+    for hi, lo, arch in PAPER_GRID:
+        cfg = get_config(arch)
+        reqs = paper_trace(n_requests)
+        for approach in APPROACHES:
+            t0 = time.time()
+            m = run_approach(approach, cfg, DEVICES[hi], DEVICES[lo], reqs)
+            wall = (time.time() - t0) * 1e6 / max(n_requests, 1)
+            paper = PAPER_TABLE2[(hi, lo, arch)][approach]
+            rows[(hi, lo, arch, approach)] = m["throughput"]
+            print(f"table2/{hi}+{lo}/{arch}/{approach},{wall:.1f},"
+                  f"tput={m['throughput']:.2f}req/s paper={paper}")
+    # headline ratios the paper reports
+    for (hi, lo, arch) in [g for g in PAPER_GRID]:
+        c = rows[(hi, lo, arch, "cronus")]
+        print(f"table2_ratio/{hi}+{lo}/{arch},0,"
+              f"vsPP={c/rows[(hi, lo, arch, 'pp')]:.2f}x "
+              f"vsHL={c/rows[(hi, lo, arch, 'disagg_hl')]:.2f}x "
+              f"vsLH={c/rows[(hi, lo, arch, 'disagg_lh')]:.2f}x "
+              f"vsDP={c/rows[(hi, lo, arch, 'dp')]:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Paper Table 3 (Appendix B): relative GPU utilization under disaggregated
+prefill — the dedicated low-end instance saturates (~100%) while the
+high-end one idles (11-54% in the paper)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import PAPER_GRID, paper_trace
+from repro.configs import get_config
+from repro.serving.hardware import DEVICES
+from repro.serving.simulator import utilization_table
+
+PAPER_TABLE3 = {  # (combo, approach) -> (prefill_util, decode_util)
+    ("A100", "A10", "llama3-8b", "disagg_hl"): (0.11, 0.97),
+    ("A100", "A10", "llama3-8b", "disagg_lh"): (0.99, 0.32),
+    ("A100", "A30", "llama3-8b", "disagg_hl"): (0.25, 0.96),
+    ("A100", "A30", "llama3-8b", "disagg_lh"): (0.98, 0.47),
+}
+
+
+def run(n_requests: int = 400):
+    print("name,us_per_call,derived")
+    for hi, lo, arch in PAPER_GRID:
+        if arch != "llama3-8b":
+            continue
+        cfg = get_config(arch)
+        reqs = paper_trace(n_requests)
+        t0 = time.time()
+        table = utilization_table(cfg, DEVICES[hi], DEVICES[lo], reqs)
+        wall = (time.time() - t0) * 1e6 / n_requests
+        for name, row in table.items():
+            paper = PAPER_TABLE3.get((hi, lo, arch, name))
+            print(f"table3/{hi}+{lo}/{arch}/{name},{wall:.1f},"
+                  f"prefill_util={row['prefill_util']:.2f} "
+                  f"decode_util={row['decode_util']:.2f} "
+                  f"paper={paper}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+from repro.configs import get_config
+from repro.serving.hardware import A10, A30, A100, DEVICES
+from repro.serving.trace import make_trace
+
+# the paper's evaluation grid (Table 2 / Fig. 4 columns)
+PAPER_GRID = [
+    ("A100", "A10", "llama3-8b"),
+    ("A100", "A10", "qwen2-7b"),
+    ("A100", "A30", "llama3-8b"),
+    ("A100", "A30", "qwen2-7b"),
+]
+
+# paper Table 2 reference numbers (req/s) for side-by-side reporting
+PAPER_TABLE2 = {
+    ("A100", "A10", "llama3-8b"): {"dp": 7.28, "pp": 3.86, "disagg_hl": 1.31,
+                                   "disagg_lh": 4.11, "cronus": 7.39},
+    ("A100", "A10", "qwen2-7b"): {"dp": 8.70, "pp": 4.08, "disagg_hl": 3.45,
+                                  "disagg_lh": 4.35, "cronus": 8.29},
+    ("A100", "A30", "llama3-8b"): {"dp": 8.54, "pp": 3.96, "disagg_hl": 2.93,
+                                   "disagg_lh": 6.14, "cronus": 8.7},
+    ("A100", "A30", "qwen2-7b"): {"dp": 10.85, "pp": 3.97, "disagg_hl": 6.74,
+                                  "disagg_lh": 6.59, "cronus": 10.27},
+}
+
+
+def paper_trace(n: int = 1000, interval: float = 0.0, seed: int = 0):
+    """Azure-conversation-statistics trace (paper §5.1: 1000 traces,
+    mean in 1014 / out 247)."""
+    return make_trace(n, seed=seed, interval=interval)
+
+
+def timed(name: str, fn: Callable):
+    t0 = time.time()
+    out = fn()
+    return out, time.time() - t0
+
+
+def emit_csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

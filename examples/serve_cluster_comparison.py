@@ -1,0 +1,47 @@
+"""End-to-end driver: replay an Azure-style trace against all five serving
+approaches on a simulated A100+A10 cluster (paper §5 conditions: 1000
+conversation requests, mean in 1014 / out 247) and print the Table-2/Fig-4
+style comparison.
+
+  PYTHONPATH=src python examples/serve_cluster_comparison.py [--n 1000]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.serving.hardware import A10, A100
+from repro.serving.simulator import APPROACHES, compare_all
+from repro.serving.trace import make_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--arch", default="llama3-8b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    print(f"== max throughput ({args.n} requests, all at t=0), "
+          f"{args.arch} on A100+A10 ==")
+    reqs = make_trace(args.n, seed=0, interval=0.0)
+    res = compare_all(cfg, A100, A10, reqs)
+    print(f"{'approach':12s} {'tput(req/s)':>12s} {'ttft_p99(s)':>12s} "
+          f"{'tbt_p99(ms)':>12s}")
+    for a in APPROACHES:
+        m = res[a]
+        print(f"{a:12s} {m['throughput']:12.2f} {m['ttft_p99']:12.2f} "
+              f"{m['tbt_p99']*1e3:12.1f}")
+
+    print(f"\n== latency at 6 req/s fixed interval ==")
+    reqs = make_trace(min(args.n, 400), seed=1, interval=1 / 6.0)
+    res = compare_all(cfg, A100, A10, reqs)
+    for a in APPROACHES:
+        m = res[a]
+        print(f"{a:12s} ttft_p99={m['ttft_p99']:8.3f}s "
+              f"tbt_p99={m['tbt_p99']*1e3:7.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

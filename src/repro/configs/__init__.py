@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    get_shape,
+    smoke_variant,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "get_config",
+    "get_shape",
+    "smoke_variant",
+]

@@ -1,0 +1,195 @@
+"""DP+chunked and PP+chunked baselines (paper §3.2-3.3, §5.1).
+
+Disaggregated H-L / L-H live in cronus.py (they reuse the Cronus code with a
+pinned partial length, exactly as the paper's evaluation does).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, List
+
+from repro.core.engine import Engine, EngineConfig
+from repro.core.metrics import aggregate
+from repro.core.request import Request
+from repro.serving.hardware import (DeviceModel, DeviceSpec, active_param_bytes,
+                                    attn_flops, kv_bytes_per_token,
+                                    matmul_flops_per_token, param_bytes)
+
+
+# ---------------------------------------------------------------------------
+# DP + chunked prefill
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DPSystem:
+    """Weighted round-robin dispatch over independent engines.
+
+    Paper §5.1: weight 3 for the A100, 1 for the A10/A30; waiting-queue caps
+    3 and 1; chunk size 512 on the high-end engine, 256 on the low-end."""
+    engines: List[Engine]
+    weights: List[int]
+    queue_caps: List[int]
+
+    def run(self, requests: List[Request], max_steps: int = 10_000_000):
+        arrivals = deque(sorted(requests, key=lambda r: r.arrival))
+        total = len(requests)
+        pattern = [i for i, w in enumerate(self.weights) for _ in range(w)]
+        pat_idx = 0
+        steps = 0
+        while (sum(len(e.finished) for e in self.engines) < total
+               and steps < max_steps):
+            steps += 1
+            # dispatch: weighted round-robin among engines with queue space;
+            # ready_time keeps engines from running future arrivals early
+            while arrivals:
+                req = arrivals[0]
+                placed = False
+                for probe in range(len(pattern)):
+                    eng_i = pattern[(pat_idx + probe) % len(pattern)]
+                    eng = self.engines[eng_i]
+                    if len(eng.queue) < self.queue_caps[eng_i]:
+                        arrivals.popleft()
+                        req.ready_time = req.arrival
+                        eng.add_request(req)
+                        pat_idx = (pat_idx + probe + 1) % len(pattern)
+                        placed = True
+                        break
+                if not placed:
+                    break
+            # advance
+            progressed = False
+            for eng in sorted(self.engines, key=lambda e: e.clock):
+                if eng.runnable():
+                    eng.step()
+                    progressed = True
+                    break
+            if not progressed:
+                nexts = [t for e in self.engines
+                         if (t := e.next_ready_time()) is not None]
+                if arrivals:
+                    nexts.append(arrivals[0].arrival)
+                if not nexts:
+                    break
+                t = min(nexts)
+                for e in self.engines:
+                    e.clock = max(e.clock, t)
+        metrics = [r.metrics for e in self.engines for r in e.finished]
+        return aggregate(metrics)
+
+
+def build_dp(cfg, hi_device: DeviceModel, lo_device: DeviceModel, *,
+             executor_factory: Callable, max_slots: int = 64,
+             block_size: int = 16) -> DPSystem:
+    hi = Engine("dp-hi", cfg,
+                EngineConfig(max_batched_tokens=512, max_slots=max_slots,
+                             block_size=block_size,
+                             num_kv_blocks=max(hi_device.kv_block_budget(block_size), 64)),
+                hi_device, executor_factory("hi"))
+    lo = Engine("dp-lo", cfg,
+                EngineConfig(max_batched_tokens=256, max_slots=max_slots,
+                             block_size=block_size,
+                             num_kv_blocks=max(lo_device.kv_block_budget(block_size), 64)),
+                lo_device, executor_factory("lo"))
+    return DPSystem(engines=[hi, lo], weights=[3, 1], queue_caps=[3, 1])
+
+
+# ---------------------------------------------------------------------------
+# PP + chunked prefill
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipelineDeviceModel:
+    """Two-stage heterogeneous pipeline: layers split by BF16 FLOPS (paper
+    §5.1). vLLM-0.6.1-era PP executes a batch's stages synchronously (no
+    microbatch overlap within one engine step), so an iteration costs the
+    SUM of stage times plus the inter-stage activation transfer — incurred
+    per chunk during prefill and per token during decode, the accumulated
+    overhead of §3.3."""
+    hi: DeviceSpec
+    lo: DeviceSpec
+    cfg: object
+
+    @property
+    def frac_hi(self) -> float:
+        return self.hi.flops / (self.hi.flops + self.lo.flops)
+
+    def _stage_time(self, spec: DeviceSpec, frac: float, flops: float,
+                    bytes_: float) -> float:
+        t_c = frac * flops / (spec.flops * spec.flops_eff)
+        t_m = frac * bytes_ / (spec.hbm_bw * spec.bw_eff)
+        return max(t_c, t_m) + spec.overhead
+
+    def chunked_iter_time(self, prefill_tokens: int, prefill_ctx: int,
+                          decode_ctx_sum: float, n_decode: int) -> float:
+        new = prefill_tokens + n_decode
+        f = matmul_flops_per_token(self.cfg) * new \
+            + attn_flops(self.cfg, prefill_tokens,
+                         prefill_ctx + prefill_tokens / 2.0) \
+            + attn_flops(self.cfg, 1, decode_ctx_sum)
+        by = active_param_bytes(self.cfg) \
+            + kv_bytes_per_token(self.cfg) * (
+                prefill_ctx + prefill_tokens + decode_ctx_sum + new)
+        stage = (self._stage_time(self.hi, self.frac_hi, f, by)
+                 + self._stage_time(self.lo, 1 - self.frac_hi, f, by))
+        comm = max(new, 1) * self.cfg.d_model * 2.0 / self.hi.link_bw
+        return stage + comm
+
+    def decode_iter_time(self, decode_ctx_sum: float, n_decode: int) -> float:
+        return self.chunked_iter_time(0, 0, decode_ctx_sum, n_decode)
+
+    def prefill_time(self, n_tokens: int, ctx_start: int = 0) -> float:
+        return self.chunked_iter_time(n_tokens, ctx_start, 0.0, 0)
+
+    def transfer_time(self, n_tokens: int) -> float:
+        return 0.0
+
+    def kv_block_budget(self, block_size: int, mem_frac: float = 0.9) -> int:
+        """Each stage holds its fraction of layers' KV; capacity is the min
+        over stages (paper §3.3: reduced effective batch size)."""
+        per_tok = kv_bytes_per_token(self.cfg)
+        if per_tok <= 0:
+            return 1_000_000
+        caps = []
+        for spec, frac in ((self.hi, self.frac_hi), (self.lo, 1 - self.frac_hi)):
+            free = spec.hbm_cap * mem_frac - frac * param_bytes(self.cfg)
+            caps.append(free / (per_tok * frac * block_size))
+        return max(int(min(caps)), 0)
+
+
+@dataclasses.dataclass
+class PPSystem:
+    engine: Engine
+
+    def run(self, requests: List[Request], max_steps: int = 10_000_000):
+        arrivals = deque(sorted(requests, key=lambda r: r.arrival))
+        total = len(requests)
+        steps = 0
+        while len(self.engine.finished) < total and steps < max_steps:
+            steps += 1
+            while arrivals and arrivals[0].arrival <= self.engine.clock:
+                req = arrivals.popleft()
+                req.ready_time = req.arrival
+                self.engine.add_request(req)
+            if self.engine.runnable():
+                self.engine.step()
+            elif arrivals:
+                self.engine.clock = max(self.engine.clock, arrivals[0].arrival)
+            else:
+                t = self.engine.next_ready_time()
+                if t is None:
+                    break
+                self.engine.clock = max(self.engine.clock, t)
+        return aggregate([r.metrics for r in self.engine.finished])
+
+
+def build_pp(cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec, *,
+             executor_factory: Callable, max_slots: int = 64,
+             block_size: int = 16) -> PPSystem:
+    device = PipelineDeviceModel(hi_spec, lo_spec, cfg)
+    eng = Engine("pp", cfg,
+                 EngineConfig(max_batched_tokens=512, max_slots=max_slots,
+                              block_size=block_size,
+                              num_kv_blocks=max(device.kv_block_budget(block_size), 64)),
+                 device, executor_factory("pp"))
+    return PPSystem(engine=eng)

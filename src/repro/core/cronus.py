@@ -1,0 +1,190 @@
+"""Cronus orchestrator (paper §4.2, Fig. 1-2) + the disaggregated baselines.
+
+Topology: frontend (with the Balancer) -> PPI (partial prefill instance,
+low-end device, prefill-only) -> KV buffer -> CPI (chunked prefill instance,
+high-end device, chunked prefill + all decode).
+
+Protocol per request R_i (paper numbering):
+  (1) at dispatch the Balancer pulls CPI stats,
+  (2) computes the partial prefill length L_p,
+  (3) dispatches R_i[:L_p] to the PPI (PPI holds <= 2 requests),
+  (4) PPI completion stores KV in the buffer and notifies the frontend,
+  (5) frontend forwards R_i (with partial_len) to the CPI,
+  (6-7) the CPI's first iteration for R_i ingests the KV transfer, overlapped
+        with other requests' decode/chunked-prefill compute,
+  then standard chunked prefill + decode on the CPI.
+
+The disaggregated baselines reuse this code verbatim with the partial
+length pinned to L_in (paper §5.1: "the same code as our partial prefill
+implementation, but always set the partial prefill length to the input
+length"), and the CPI flipped to decode-only. High->Low swaps the devices.
+
+Time is simulated (engines carry local clocks advanced by the device
+roofline model); compute is real or null depending on the executor.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from collections import deque
+from typing import Callable, List, Optional
+
+from repro.core.balancer import Balancer
+from repro.core.engine import Engine, EngineConfig
+from repro.core.metrics import aggregate
+from repro.core.request import ReqState, Request
+
+
+class FixedBalancer:
+    """Disaggregated baselines: partial prefill length == input length."""
+
+    def partial_prefill_length(self, l_in: int, stats) -> int:
+        return l_in
+
+
+@dataclasses.dataclass
+class CronusSystem:
+    ppi: Engine                      # prefill-only, low-end device
+    cpi: Engine                      # chunked prefill + decode, high-end
+    balancer: object                 # Balancer | FixedBalancer
+    max_ppi_requests: int = 2        # paper: at most two in the PPI
+    # Decode offload (paper §6 "future work", implemented here): when the
+    # CPI lacks KV blocks for a request (Alg. 1's fallback case — the
+    # decode-bound regime of short-input/long-output traces), the request
+    # completes ENTIRELY on the PPI: full prefill there, then decode there
+    # too, with a zero-cost local "transfer". Mitigates the load imbalance
+    # the paper identifies in its Limitations section.
+    #
+    # Policy lesson (bench_offload_limitation, first attempt REFUTED): the
+    # fallback condition alone overloads the slow PPI (259/300 requests
+    # offloaded -> throughput collapsed 3.4 -> 0.2 req/s, i.e. the system
+    # inverted into Disagg-H-L). Offload must be bounded by the PPI's own
+    # spare decode capacity — `max_offload_frac` of its KV pool.
+    decode_offload: bool = False
+    max_offload_frac: float = 0.5
+
+    def run(self, requests: List[Request], max_steps: int = 10_000_000):
+        arrivals = deque(sorted(requests, key=lambda r: r.arrival))
+        total = len(requests)
+        in_ppi = {}      # ppi view -> original
+        offloaded = set()
+        steps = 0
+
+        def ppi_prefill_load():
+            # offloaded decoders don't count against the paper's <=2 cap
+            return len(in_ppi) + sum(
+                1 for r in self.ppi.queue if r.req_id not in offloaded
+                and r.req_id not in in_ppi)
+
+        def n_done():
+            return len(self.cpi.finished) + len(self.ppi.finished)
+
+        while n_done() < total and steps < max_steps:
+            steps += 1
+            # ---- frontend dispatch: fill the PPI up to its cap ----------
+            while arrivals and ppi_prefill_load() < self.max_ppi_requests:
+                req = arrivals[0]
+                if req.arrival > self.ppi.clock and ppi_prefill_load() > 0:
+                    break  # PPI still busy; revisit after it advances
+                arrivals.popleft()
+                self.ppi.clock = max(self.ppi.clock, req.arrival)
+                stats = self.cpi.stats()                       # step (1)
+                l_p = self.balancer.partial_prefill_length(     # step (2)
+                    req.input_len, stats)
+                req.partial_len = int(l_p)
+                if (self.decode_offload and l_p >= req.input_len
+                        and not self.balancer.__class__.__name__.startswith(
+                            "Fixed")):
+                    # Alg.1 fell back (CPI out of KV blocks) -> offload the
+                    # whole request to the PPI (§6), but only while the PPI
+                    # keeps >= (1 - max_offload_frac) of its KV pool free
+                    # for its prefill duties
+                    alloc = self.ppi.allocator
+                    need = alloc.blocks_needed(req.input_len + req.output_len)
+                    budget = int(alloc.num_blocks * self.max_offload_frac)
+                    used = alloc.num_blocks - alloc.num_free
+                    if used + need <= budget:
+                        offloaded.add(req.req_id)
+                view = copy.copy(req)                           # step (3)
+                view.prompt = req.prompt[:req.partial_len]
+                view.output_len = 0
+                view.ready_time = req.arrival
+                view.state = ReqState.WAITING
+                view.context_len = 0
+                in_ppi[view.req_id] = req
+                self.ppi.add_request(view)
+
+            # ---- route PPI completions (steps 4-5; offloaded stay local) --
+            while self.ppi.completed_prefills:
+                t_done, view = self.ppi.completed_prefills.pop(0)
+                orig = in_ppi.pop(view.req_id)
+                orig.partial_len = view.context_len
+                orig.context_len = view.context_len
+                orig.kv_payload = view.kv_payload
+                orig.first_token = view.first_token
+                orig.ready_time = t_done
+                if orig.req_id in offloaded:
+                    orig.local_payload = True       # re-inject on the PPI
+                    self.ppi.add_request(orig)
+                else:
+                    self.cpi.add_request(orig)
+
+            # ---- advance the lagging runnable engine ---------------------
+            progressed = False
+            for eng in sorted((self.ppi, self.cpi), key=lambda e: e.clock):
+                if eng.runnable():
+                    eng.step()
+                    progressed = True
+                    break
+            if not progressed:
+                # engines idle: jump clocks to the next event
+                nexts = [t for t in (self.ppi.next_ready_time(),
+                                     self.cpi.next_ready_time()) if t is not None]
+                if arrivals:
+                    nexts.append(arrivals[0].arrival)
+                if not nexts:
+                    break  # deadlock guard (shouldn't happen)
+                t = min(nexts)
+                self.ppi.clock = max(self.ppi.clock, t)
+                self.cpi.clock = max(self.cpi.clock, t)
+
+        return aggregate([r.metrics for r in self.cpi.finished])
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
+                 balancer: Optional[object] = None,
+                 max_batched_tokens: int = 512,
+                 max_slots: int = 64, block_size: int = 16,
+                 decode_only_cpi: bool = False,
+                 decode_offload: bool = False) -> CronusSystem:
+    """executor_factory(role: str) -> executor ('ppi' | 'cpi')."""
+    ppi_blocks = max(ppi_device.kv_block_budget(block_size), 64)
+    cpi_blocks = max(cpi_device.kv_block_budget(block_size), 64)
+    ppi = Engine("ppi", cfg,
+                 EngineConfig(max_batched_tokens=max_batched_tokens,
+                              max_slots=max_slots if decode_offload else 2,
+                              block_size=block_size,
+                              num_kv_blocks=ppi_blocks, prefill_only=True),
+                 ppi_device, executor_factory("ppi"))
+    cpi = Engine("cpi", cfg,
+                 EngineConfig(max_batched_tokens=max_batched_tokens,
+                              max_slots=max_slots, block_size=block_size,
+                              num_kv_blocks=cpi_blocks,
+                              decode_only=decode_only_cpi),
+                 cpi_device, executor_factory("cpi"))
+    return CronusSystem(ppi=ppi, cpi=cpi,
+                        balancer=balancer if balancer is not None
+                        else FixedBalancer(),
+                        decode_offload=decode_offload)
+
+
+def build_disaggregated(cfg, prefill_device, decode_device, *,
+                        executor_factory: Callable, **kw) -> CronusSystem:
+    """Disagg L-H: prefill_device=low / decode_device=high; H-L swapped."""
+    return build_cronus(cfg, prefill_device, decode_device,
+                        executor_factory=executor_factory,
+                        balancer=FixedBalancer(), decode_only_cpi=True, **kw)

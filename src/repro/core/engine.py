@@ -1,0 +1,253 @@
+"""Continuous-batching inference engine with chunked prefill (vLLM-class).
+
+One ``Engine`` models one serving instance (one device or pod slice). Each
+``step()`` executes a single iteration: all RUNNING requests decode one
+token, and (if token budget remains) the head PREFILL request advances by a
+chunk — the Sarathi/vLLM piggybacking the paper builds on. Iteration
+duration comes from the device's roofline model (simulated time); compute
+correctness comes from the pluggable executor (real JAX or null).
+
+The engine doubles as:
+  * the CPI (chunked prefill instance) of Cronus — requests arrive with
+    ``partial_len`` set and a KV payload to ingest,
+  * a standalone DP worker (chunked prefill + decode),
+  * a decode-only / prefill-only instance for the disaggregated baselines
+    (via ``prefill_only`` / ``decode_only``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.core.balancer import CPIStats
+from repro.core.request import ReqState, Request
+from repro.kvcache import BlockAllocator
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batched_tokens: int = 512      # chunked-prefill token budget B
+    max_slots: int = 64                # resident request limit
+    block_size: int = 16               # KV block granularity N_size
+    num_kv_blocks: int = 4096          # KV pool size (from device HBM budget)
+    prefill_only: bool = False         # disaggregated prefill instance
+    decode_only: bool = False          # disaggregated decode instance
+
+
+class Engine:
+    def __init__(self, name: str, cfg, engine_cfg: EngineConfig, device_model,
+                 executor):
+        self.name = name
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        self.device = device_model
+        self.executor = executor
+        self.clock = 0.0
+        self.allocator = BlockAllocator(engine_cfg.num_kv_blocks,
+                                        engine_cfg.block_size)
+        self.slots: List[Optional[Request]] = [None] * engine_cfg.max_slots
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self.completed_prefills: List = []   # (time, req) from prefill-only role
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request, now: Optional[float] = None):
+        if now is not None:
+            self.clock = max(self.clock, now)
+        req.state = ReqState.WAITING
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self):
+        while self.queue:
+            req = self.queue[0]
+            if req.ready_time > self.clock:
+                return  # FCFS: head not yet ready (in transit from the PPI)
+            slot = self._free_slot()
+            if slot is None:
+                return
+            # conservative: reserve blocks for the full final context
+            need = req.input_len + req.output_len
+            if not self.allocator.can_allocate(need):
+                return
+            self.queue.popleft()
+            self.allocator.allocate(req.req_id, need)
+            req.slot = slot
+            self.slots[slot] = req
+            self.executor.reset_slot(slot)
+            if req.kv_payload is not None:
+                req.state = ReqState.TRANSFER       # ingest during next iter
+            elif req.context_len >= req.input_len:
+                req.state = ReqState.RUNNING         # pre-prefilled elsewhere
+            else:
+                req.state = ReqState.PREFILL
+
+    # ------------------------------------------------------------------
+    # stats for the Balancer (paper step (1))
+    # ------------------------------------------------------------------
+    def stats(self) -> CPIStats:
+        running = [r for r in self.slots if r and r.state == ReqState.RUNNING]
+        return CPIStats(
+            n_decode=len(running),
+            decode_ctx_sum=float(sum(r.total_ctx for r in running)),
+            free_kv_blocks=self.allocator.num_free,
+            block_size=self.ecfg.block_size,
+            max_batched_tokens=self.ecfg.max_batched_tokens,
+        )
+
+    # ------------------------------------------------------------------
+    def has_work(self) -> bool:
+        if self.queue and self._free_slot() is not None:
+            return True
+        return any(r is not None for r in self.slots)
+
+    def runnable(self) -> bool:
+        """True if step() would make progress right now."""
+        if any(r is not None for r in self.slots):
+            return True
+        if self.queue and self._free_slot() is not None:
+            req = self.queue[0]
+            return (req.ready_time <= self.clock
+                    and self.allocator.can_allocate(req.input_len + req.output_len))
+        return False
+
+    def next_ready_time(self) -> Optional[float]:
+        """If idle but the queue head is in transit, when it becomes ready."""
+        if any(r is not None for r in self.slots) or not self.queue:
+            return None
+        return self.queue[0].ready_time
+
+    # ------------------------------------------------------------------
+    # one iteration
+    # ------------------------------------------------------------------
+    def step(self) -> float:
+        """Execute one iteration; returns its simulated duration (s)."""
+        self._admit()
+
+        # --- ingest pending KV transfers (overlapped with compute) -------
+        transfer_time = 0.0
+        ttft_at_ingest: List[Request] = []
+        for r in self.slots:
+            if r and r.state == ReqState.TRANSFER:
+                self.executor.inject_kv(r.slot, r.kv_payload, r.context_len)
+                if not r.local_payload:   # decode-offload: KV never moved
+                    transfer_time = max(transfer_time,
+                                        self.device.transfer_time(r.context_len))
+                r.kv_payload = None
+                r.state = (ReqState.RUNNING if r.context_len >= r.input_len
+                           else ReqState.PREFILL)
+                if r.state is ReqState.RUNNING and r.first_token is not None:
+                    # fully-prefilled elsewhere (disagg / Cronus fallback):
+                    # TTFT counts the KV transfer (paper §5.1 fairness rule)
+                    r.generated.append(r.first_token)
+                    ttft_at_ingest.append(r)
+
+        decode_reqs = [r for r in self.slots
+                       if r and r.state == ReqState.RUNNING]
+        budget = self.ecfg.max_batched_tokens - len(decode_reqs)
+
+        # --- pick prefill chunk (head PREFILL request) --------------------
+        chunk_req, chunk_len = None, 0
+        if not self.ecfg.decode_only:
+            for r in self.slots:
+                if r and r.state == ReqState.PREFILL:
+                    chunk_req = r
+                    break
+            if chunk_req is not None:
+                # prefill-only instances have no decodes, so their budget is
+                # the full token batch — they too proceed chunk by chunk
+                chunk_len = min(chunk_req.prefill_remaining, max(budget, 0))
+                if chunk_len == 0:
+                    chunk_req = None
+
+        if chunk_req is None and not decode_reqs:
+            # idle iteration (only transfers) — charge transfer time if any
+            return transfer_time
+
+        # --- execute ------------------------------------------------------
+        prefill_ctx = chunk_req.context_len if chunk_req else 0
+        if chunk_req is not None:
+            tokens = chunk_req.prompt[
+                chunk_req.context_len: chunk_req.context_len + chunk_len]
+            completes = (chunk_req.context_len + chunk_len
+                         >= chunk_req.input_len)
+            first = self.executor.prefill_chunk(
+                chunk_req.slot, tokens, chunk_req.context_len, completes,
+                enc_emb=chunk_req.enc_emb if chunk_req.context_len == 0 else None)
+            chunk_req.context_len += chunk_len
+
+        if decode_reqs:
+            slot_tokens, slot_lens = {}, {}
+            for r in decode_reqs:
+                # feed the last generated token; its cache position is
+                # input_len + (#generated - 1)
+                slot_tokens[r.slot] = r.generated[-1]
+                slot_lens[r.slot] = r.total_ctx - 1
+            new_tokens = self.executor.decode(slot_tokens, slot_lens)
+
+        # --- timing -------------------------------------------------------
+        decode_ctx_sum = float(sum(r.total_ctx for r in decode_reqs))
+        duration = self.device.chunked_iter_time(
+            chunk_len, prefill_ctx, decode_ctx_sum, len(decode_reqs))
+        duration = max(duration, transfer_time)
+        self.clock += duration
+        for r in ttft_at_ingest:
+            r.metrics.first_token_time = self.clock
+            if r.done:
+                r.metrics.finish_time = self.clock
+                self._finish(r)
+
+        # --- bookkeeping ----------------------------------------------------
+        if chunk_req is not None and chunk_req.context_len >= chunk_req.input_len:
+            if self.ecfg.prefill_only:
+                chunk_req.first_token = first
+                chunk_req.metrics.first_token_time = self.clock
+                self._complete_prefill_instance(chunk_req)
+            else:
+                chunk_req.first_token = first
+                chunk_req.generated.append(first)   # first output token
+                chunk_req.metrics.first_token_time = self.clock
+                if chunk_req.done:
+                    chunk_req.metrics.finish_time = self.clock
+                    self._finish(chunk_req)
+                else:
+                    chunk_req.state = ReqState.RUNNING
+
+        if decode_reqs:
+            for r in decode_reqs:
+                tok = new_tokens[r.slot]
+                r.generated.append(tok)
+                if r.done:
+                    r.metrics.token_times.append(self.clock)
+                    r.metrics.finish_time = self.clock
+                    self._finish(r)
+                else:
+                    r.metrics.token_times.append(self.clock)
+        return duration
+
+    # ------------------------------------------------------------------
+    def _finish(self, req: Request):
+        req.state = ReqState.FINISHED
+        self.allocator.free(req.req_id)
+        self.executor.reset_slot(req.slot)
+        self.slots[req.slot] = None
+        req.slot = None
+        self.finished.append(req)
+
+    def _complete_prefill_instance(self, req: Request):
+        """Prefill-only instance: extract KV and release the slot; the
+        orchestrator routes the payload to the decode instance."""
+        req.kv_payload = self.executor.extract_kv(req.slot, req.context_len)
+        self.allocator.free(req.req_id)
+        self.slots[req.slot] = None
+        req.slot = None
+        req.state = ReqState.WAITING
+        self.completed_prefills.append((self.clock, req))

@@ -1,0 +1,231 @@
+"""Executors: the compute backends of the serving engines.
+
+``RealExecutor`` runs actual JAX forwards on a slot-based cache (functional
+correctness at reduced scale — the engine's tokens must match a monolithic
+run bit-for-bit). ``NullExecutor`` skips compute entirely (scheduling +
+timing studies at paper scale — Tables 2-3, Fig. 4). Both sit behind the
+same interface, so the scheduler/balancer code under test is identical.
+
+Slot-garbage invariant (why batched forwards are safe): forwards always run
+over ALL slots; rows of slots not participating this iteration write
+garbage K/V at indices beyond their valid region. Validity is defined
+exclusively by host-managed ``kv_positions``, which only ever advance for
+participating slots, and any later advance overwrites those indices with
+real K/V first. Freed slots reset their position row to -1.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _pow2_bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+# Margin for deterministic greedy tie-breaking. XLA CPU results carry small
+# environment-dependent jitter (heap alignment changes SIMD reduction tails,
+# ~1e-4 with fp32); plain argmax then flips near-ties and the token stream
+# cascades. Reproducible serving instead picks the LOWEST token id among all
+# logits within this margin of the max — stable under jitter << margin.
+GREEDY_TIE_MARGIN = 0.05
+
+
+def robust_greedy(logits_row) -> int:
+    row = np.asarray(logits_row, np.float32)
+    top = row.max()
+    return int(np.nonzero(row >= top - GREEDY_TIE_MARGIN)[0][0])
+
+
+class NullExecutor:
+    """No compute; emits deterministic dummy tokens."""
+
+    def __init__(self):
+        self._counter = 0
+
+    def prefill_chunk(self, slot, tokens, ctx_len, completes, enc_emb=None):
+        if completes:
+            self._counter += 1
+            return self._counter
+        return None
+
+    def decode(self, slot_tokens: Dict[int, int], slot_lens: Dict[int, int]):
+        out = {}
+        for s in slot_tokens:
+            self._counter += 1
+            out[s] = self._counter
+        return out
+
+    def extract_kv(self, slot, upto):
+        return {"_null": upto}
+
+    def inject_kv(self, slot, payload, upto):
+        pass
+
+    def reset_slot(self, slot):
+        pass
+
+
+class RealExecutor:
+    """JAX execution over a slot-based unified cache with host-managed
+    positions. Chunk lengths are padded to power-of-two buckets to bound
+    recompilation."""
+
+    def __init__(self, model, params, *, max_slots: int, s_kv: int,
+                 chunk_pad: Optional[int] = None, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_slots = max_slots
+        self.s_kv = s_kv
+        # Fixed chunk width: padding every prefill chunk to one width keeps
+        # all forwards shape-identical, so XLA reductions are bit-identical
+        # across schedules (token streams then match any same-width oracle).
+        self.chunk_pad = chunk_pad
+        self.cache = model.init_cache(max_slots, s_kv)
+        self.pos = np.full((max_slots, s_kv), -1, np.int32)   # host positions
+        self.lens = np.zeros((max_slots,), np.int32)          # host lengths
+        self._fwd = jax.jit(
+            lambda p, inp, cache, cl, pos, kvp, dec: model.forward(
+                p, inp, cache, cl, positions=pos, kv_positions=kvp,
+                decode=dec),
+            static_argnames=("dec",))
+        self._enc_dec = self.cfg.enc_dec
+
+    # ------------------------------------------------------------------
+    def _run(self, inputs, positions, decode: bool, active_mask=None,
+             enc_out=None):
+        kvp = jnp.asarray(self.pos)
+        cl = jnp.asarray(self.lens)
+        if self._enc_dec:
+            logits, new_cache, _ = self.model.forward(
+                self.params, jnp.asarray(inputs), self.cache, cl,
+                positions=jnp.asarray(positions), kv_positions=kvp,
+                enc_out=enc_out, decode=decode)
+        else:
+            logits, new_cache, _ = self._fwd(
+                self.params, jnp.asarray(inputs), self.cache, cl,
+                jnp.asarray(positions), kvp, decode)
+        # Attention-cache garbage written to inactive slots is masked by
+        # positions, but recurrent SSM state is not — restore it for slots
+        # that did not participate in this forward.
+        if active_mask is not None and "h" in new_cache.get("stack", {}):
+            m = jnp.asarray(active_mask)
+            old, new = self.cache["stack"], dict(new_cache["stack"])
+            for key in ("h", "conv"):
+                sel = m.reshape((1, -1) + (1,) * (old[key].ndim - 2))
+                new[key] = jnp.where(sel, new[key], old[key])
+            new_cache = dict(new_cache)
+            new_cache["stack"] = new
+        self.cache = new_cache
+        return logits
+
+    def prefill_chunk(self, slot: int, tokens: np.ndarray, ctx_len: int,
+                      completes: bool, enc_emb=None) -> Optional[int]:
+        """Run one prefill chunk for `slot`. Returns first token if the
+        prompt completes with this chunk."""
+        c = len(tokens)
+        if self.chunk_pad and c <= self.chunk_pad:
+            cb = self.chunk_pad
+        else:
+            cb = _pow2_bucket(c)
+        inputs = np.zeros((self.max_slots, cb), np.int32)
+        positions = np.full((self.max_slots, cb), -1, np.int32)
+        inputs[slot, :c] = tokens
+        positions[slot, :c] = ctx_len + np.arange(c)
+        # mark new positions valid for this slot (host-side)
+        idx = (ctx_len + np.arange(c)) % self.s_kv
+        self.pos[slot, idx] = ctx_len + np.arange(c)
+        if self._enc_dec and enc_emb is not None:
+            # run the encoder for this request only and install its
+            # cross-KV into the slot (never clobbering other slots)
+            assert enc_emb.shape[0] == self.cache["cross_k"].shape[2], (
+                "encoder input length must match the cross-KV cache "
+                f"({enc_emb.shape[0]} vs {self.cache['cross_k'].shape[2]}); "
+                "pad/crop the frontend-stub embeddings to enc_seq_len")
+            enc_out = self.model.encode(self.params,
+                                        jnp.asarray(enc_emb)[None])
+            ck, cv = self.model.compute_cross_kv(self.params, enc_out)
+            cache = dict(self.cache)
+            cache["cross_k"] = cache["cross_k"].at[:, slot].set(ck[:, 0])
+            cache["cross_v"] = cache["cross_v"].at[:, slot].set(cv[:, 0])
+            self.cache = cache
+        mask = np.zeros((self.max_slots,), bool)
+        mask[slot] = True
+        logits = self._run(inputs, positions, decode=False, active_mask=mask)
+        self.lens[slot] = ctx_len + c
+        if completes:
+            return robust_greedy(logits[slot, c - 1])
+        return None
+
+    def decode(self, slot_tokens: Dict[int, int],
+               slot_lens: Dict[int, int]) -> Dict[int, int]:
+        """One decode step for the given slots. Returns slot -> next token."""
+        inputs = np.zeros((self.max_slots, 1), np.int32)
+        positions = np.full((self.max_slots, 1), -1, np.int32)
+        mask = np.zeros((self.max_slots,), bool)
+        for s, tok in slot_tokens.items():
+            inputs[s, 0] = tok
+            positions[s, 0] = slot_lens[s]
+            self.pos[s, slot_lens[s] % self.s_kv] = slot_lens[s]
+            mask[s] = True
+        logits = self._run(inputs, positions, decode=True, active_mask=mask)
+        out = {}
+        for s in slot_tokens:
+            out[s] = robust_greedy(logits[s, 0])
+            self.lens[s] = slot_lens[s] + 1
+        return out
+
+    # ------------------------------------------------------------------
+    def extract_kv(self, slot: int, upto: int):
+        """Pull one slot's cache slices (the PPI->CPI payload)."""
+        payload = {"stack": jax.tree.map(lambda a: a[:, slot],
+                                         self.cache["stack"])}
+        if "dense" in self.cache:
+            payload["dense"] = jax.tree.map(lambda a: a[:, slot],
+                                            self.cache["dense"])
+        for k in ("cross_k", "cross_v"):
+            if k in self.cache:
+                payload[k] = self.cache[k][:, slot]
+        payload["_upto"] = upto
+        return payload
+
+    def inject_kv(self, slot: int, payload, upto: int):
+        """Install a transferred payload into `slot` and mark [0, upto) valid."""
+        def put(dst, src):
+            return dst.at[:, slot].set(src)
+
+        cache = dict(self.cache)
+        cache["stack"] = jax.tree.map(put, self.cache["stack"],
+                                      payload["stack"])
+        if "dense" in payload:
+            cache["dense"] = jax.tree.map(put, self.cache["dense"],
+                                          payload["dense"])
+        for k in ("cross_k", "cross_v"):
+            if k in payload:
+                cache[k] = cache[k].at[:, slot].set(payload[k])
+        self.cache = cache
+        self.pos[slot, :] = -1
+        self.pos[slot, :upto] = np.arange(upto)
+        self.lens[slot] = upto
+
+    def reset_slot(self, slot: int):
+        self.pos[slot, :] = -1
+        self.lens[slot] = 0
+        # Attention-cache garbage is masked out by positions, but recurrent
+        # state (SSM/hybrid) has no positional validity — zero it explicitly.
+        stack = self.cache["stack"]
+        if "h" in stack:
+            cache = dict(self.cache)
+            new_stack = dict(stack)
+            for key in ("h", "conv"):
+                new_stack[key] = stack[key].at[:, slot].set(0)
+            cache["stack"] = new_stack
+            self.cache = cache

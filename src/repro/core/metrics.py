@@ -1,0 +1,53 @@
+"""Serving QoE metrics: throughput, TTFT P99, TBT P99 (paper §2, §5)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    req_id: str
+    arrival: float
+    input_len: int
+    output_len: int
+    first_token_time: Optional[float] = None    # absolute time of first token
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    finish_time: Optional[float] = None
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival
+
+    @property
+    def tbts(self) -> List[float]:
+        ts = [self.first_token_time] + self.token_times
+        return [b - a for a, b in zip(ts[:-1], ts[1:])]
+
+
+def percentile(values, p: float) -> float:
+    if not values:
+        return float("nan")
+    return float(np.percentile(np.asarray(values), p))
+
+
+def aggregate(reqs: List[RequestMetrics]) -> Dict[str, float]:
+    done = [r for r in reqs if r.finish_time is not None]
+    if not done:
+        return {"throughput": 0.0, "ttft_p99": float("nan"),
+                "tbt_p99": float("nan"), "completed": 0}
+    t0 = min(r.arrival for r in done)
+    t1 = max(r.finish_time for r in done)
+    ttfts = [r.ttft for r in done if r.first_token_time is not None]
+    tbts = [tbt for r in done for tbt in r.tbts]
+    return {
+        "throughput": len(done) / max(t1 - t0, 1e-9),
+        "ttft_p50": percentile(ttfts, 50),
+        "ttft_p99": percentile(ttfts, 99),
+        "tbt_p50": percentile(tbts, 50),
+        "tbt_p99": percentile(tbts, 99),
+        "completed": len(done),
+        "makespan": t1 - t0,
+    }

@@ -1,0 +1,64 @@
+"""Request lifecycle for the serving engines."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, List, Optional
+
+import numpy as np
+
+from repro.core.metrics import RequestMetrics
+
+
+class ReqState(enum.Enum):
+    WAITING = "waiting"        # in a queue, no cache slot
+    TRANSFER = "transfer"      # admitted; KV payload arriving (Cronus/disagg)
+    PREFILL = "prefill"        # chunked prefill in progress
+    RUNNING = "running"        # decoding
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: str
+    prompt: np.ndarray                    # int32 [L_in]
+    output_len: int
+    arrival: float = 0.0
+    enc_emb: Optional[np.ndarray] = None  # whisper-style encoder inputs (stub)
+
+    # Cronus bookkeeping
+    partial_len: int = 0                  # tokens prefilled by the PPI
+    kv_payload: Any = None                # extracted cache slices in transit
+    first_token: Optional[int] = None     # produced by PPI if partial == full
+    local_payload: bool = False           # payload stays on-device (offload)
+
+    # engine-local state
+    ready_time: float = 0.0               # earliest time this engine may run it
+    state: ReqState = ReqState.WAITING
+    slot: Optional[int] = None
+    context_len: int = 0                  # tokens resident in this engine's cache
+    generated: List[int] = dataclasses.field(default_factory=list)
+    metrics: Optional[RequestMetrics] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.metrics is None:
+            self.metrics = RequestMetrics(self.req_id, self.arrival,
+                                          len(self.prompt), self.output_len)
+
+    @property
+    def input_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def prefill_remaining(self) -> int:
+        return max(self.input_len - self.context_len, 0)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.output_len
+
+    @property
+    def total_ctx(self) -> int:
+        """Context length during decode (prompt + generated so far)."""
+        return self.input_len + len(self.generated)

@@ -1,0 +1,3 @@
+from repro.kvcache.allocator import BlockAllocator
+
+__all__ = ["BlockAllocator"]

@@ -1,0 +1,61 @@
+"""Paged-KV block allocator (host-side bookkeeping, vLLM-style).
+
+The Balancer (paper Alg. 1) gates admission on ``N_free < ceil(L_in / N_size)``
+— this allocator is the source of truth for that check. The functional
+engine allocates blocks per request as its context grows; the Pallas
+paged-attention kernel consumes the same block tables on TPU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+
+class BlockAllocator:
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._owned: Dict[str, List[int]] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.block_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.blocks_needed(n_tokens) <= self.num_free
+
+    def allocate(self, req_id: str, n_tokens: int) -> List[int]:
+        need = self.blocks_needed(n_tokens)
+        if need > self.num_free:
+            raise MemoryError(f"out of KV blocks: need {need}, free {self.num_free}")
+        blocks = [self._free.pop() for _ in range(need)]
+        self._owned.setdefault(req_id, []).extend(blocks)
+        return blocks
+
+    def extend(self, req_id: str, old_tokens: int, new_tokens: int) -> List[int]:
+        """Grow a request's allocation from old_tokens to new_tokens."""
+        have = self.blocks_needed(old_tokens) if old_tokens else 0
+        need = self.blocks_needed(new_tokens)
+        extra = max(0, need - have)
+        if extra > self.num_free:
+            raise MemoryError(f"out of KV blocks: need {extra}, free {self.num_free}")
+        blocks = [self._free.pop() for _ in range(extra)]
+        self._owned.setdefault(req_id, []).extend(blocks)
+        return blocks
+
+    def free(self, req_id: str) -> None:
+        blocks = self._owned.pop(req_id, [])
+        self._free.extend(blocks)
+
+    def block_table(self, req_id: str) -> List[int]:
+        return list(self._owned.get(req_id, []))
+
+    def check_invariants(self) -> None:
+        owned = [b for bs in self._owned.values() for b in bs]
+        assert len(owned) == len(set(owned)), "double-allocated block"
+        assert len(owned) + len(self._free) == self.num_blocks, "leaked blocks"
+        assert not (set(owned) & set(self._free)), "block both owned and free"

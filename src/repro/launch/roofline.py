@@ -1,0 +1,114 @@
+"""Roofline-term extraction from the compiled dry-run artifact.
+
+Terms (per EXPERIMENTS.md §Roofline, TPU v5e targets):
+  compute    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips x 819 GB/s)
+  collective = collective_bytes / (chips x 50 GB/s per ICI link)
+
+``cost_analysis`` operates on the SPMD-partitioned per-device module, so its
+flops/bytes are per-device; we report both per-device and global (x chips).
+Collective bytes are parsed from the optimized HLO text: the sum of result-
+shape bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per device).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16, per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per device) from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result shape appears before " <op-name>(", e.g.:
+        #   %ag = bf16[8,128]{1,0} all-gather(%x), ...
+        for kind in _COLLECTIVES:
+            marker = f" {kind}("
+            if marker in ls and not ls.startswith("//"):
+                # left side of '=' may also contain shapes (variable name no);
+                # take the section between '=' and the op marker
+                eq = ls.find("=")
+                seg = ls[eq + 1: ls.find(marker)] if eq >= 0 else ls
+                out[kind] += _shape_bytes(seg)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_report(compiled, n_chips: int, model_flops_global: float) -> Dict:
+    cost = compiled.cost_analysis() or {}
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    report = {
+        "chips": n_chips,
+        "flops_per_device": flops_dev,
+        "flops_global": flops_dev * n_chips,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll["total"],
+        "collective_ops": {k: coll[k] for k in _COLLECTIVES},
+        "collective_count": coll["count"],
+        "t_compute": flops_dev / PEAK_FLOPS,
+        "t_memory": bytes_dev / HBM_BW,
+        "t_collective": coll["total"] / ICI_BW,
+        "model_flops_global": model_flops_global,
+    }
+    report["useful_flops_ratio"] = (
+        model_flops_global / report["flops_global"]
+        if report["flops_global"] else float("nan"))
+    terms = {"compute": report["t_compute"], "memory": report["t_memory"],
+             "collective": report["t_collective"]}
+    report["bottleneck"] = max(terms, key=terms.get)
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        try:
+            report[f"mem_{attr}"] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    return report
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for serving,
+    D = total tokens processed globally this step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per request
+    return 2.0 * n * tokens

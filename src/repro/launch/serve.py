@@ -1,0 +1,73 @@
+"""Serving launcher: run Cronus (or a baseline) on a trace.
+
+Examples:
+  # paper-scale scheduling/timing run (null executor, simulated clocks):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+      --approach cronus --hi A100 --lo A10 --n-requests 1000
+
+  # functional run with real JAX execution on reduced config:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
+      --approach cronus --n-requests 8 --real --scale 0.02
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.core.executor import NullExecutor, RealExecutor
+from repro.models import build_model
+from repro.serving.hardware import DEVICES
+from repro.serving.simulator import APPROACHES, build_system
+from repro.serving.trace import make_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--approach", default="cronus", choices=APPROACHES)
+    ap.add_argument("--hi", default="A100", choices=sorted(DEVICES))
+    ap.add_argument("--lo", default="A10", choices=sorted(DEVICES))
+    ap.add_argument("--n-requests", type=int, default=1000)
+    ap.add_argument("--interval", type=float, default=0.0,
+                    help="arrival interval (s); 0 = all at t0 (max tput)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config")
+    ap.add_argument("--real", action="store_true",
+                    help="real JAX execution (requires --smoke scale)")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="trace length scale (use ~0.02 with --real)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    reqs = make_trace(args.n_requests, seed=args.seed, interval=args.interval,
+                      vocab_size=cfg.vocab_size, scale=args.scale)
+
+    if args.real:
+        model = build_model(cfg, exact_moe=True)
+        params = model.init_params(jax.random.PRNGKey(0))
+        s_kv = int(max(r.input_len + r.output_len for r in reqs) + 8)
+
+        def factory(role):
+            return RealExecutor(model, params,
+                                max_slots=2 if role == "ppi" else 16,
+                                s_kv=s_kv)
+        ex_kw = dict(executor_factory=factory, max_slots=16, block_size=4)
+    else:
+        ex_kw = dict(executor_factory=lambda role: NullExecutor())
+
+    system = build_system(args.approach, cfg, DEVICES[args.hi],
+                          DEVICES[args.lo], **ex_kw)
+    metrics = system.run(reqs)
+    print(json.dumps(metrics, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(metrics, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

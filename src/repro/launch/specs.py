@@ -1,0 +1,235 @@
+"""Abstract input specs (ShapeDtypeStruct + NamedSharding) per
+(architecture x input shape) for the multi-pod dry-run. No allocation.
+
+Sharding policy (see DESIGN.md §4):
+  * batch        -> ('pod','data') / ('data',)
+  * attention KV -> kv-heads on 'model' when divisible, else the cache
+                    *sequence* on 'model' (GSPMD then computes flash-decode
+                    style partial attention with all-reduce combines)
+  * long_500k    -> batch=1: KV sequence sharded over data x model;
+                    SWA-variant archs use a ring cache of window size
+  * experts      -> 'model' (expert parallel), MoE dispatch via sort/gather
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import batch_axes, sharding_rules
+from repro.models import build_model
+from repro.models.sharding import params_sharding_tree
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
+
+WHISPER_TRAIN_ENC_LEN = 1500
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        key = getattr(k, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _with_sharding(abstract, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        abstract, shardings)
+
+
+def build_dryrun_model(cfg: ModelConfig, shape: InputShape,
+                       scan_unroll: bool = False):
+    """long_500k on full-attention archs uses the sliding-window variant."""
+    window_override = None
+    if shape.name == "long_500k" and cfg.swa_variant_window and not cfg.window_size:
+        window_override = cfg.swa_variant_window
+    return build_model(cfg, window_override=window_override,
+                       scan_unroll=scan_unroll), window_override
+
+
+def cache_seq_len(cfg: ModelConfig, shape: InputShape,
+                  window_override) -> int:
+    if cfg.arch_type == "ssm":
+        return 1
+    if window_override:
+        # ring cache: window + chunk (decode chunk = 1). Must hold the full
+        # window *plus* the tokens being written, or the write evicts
+        # entries the chunk's own queries still need.
+        return window_override + 1
+    return shape.seq_len
+
+
+def _cache_shardings(model, cfg, mesh, shape, s_kv, multi_pod,
+                     hd_sharded: bool = False):
+    b_ax = batch_axes(multi_pod) if shape.global_batch > 1 else None
+    n_dev_model = mesh.shape["model"]
+    kv_on_model = (cfg.n_kv_heads % n_dev_model == 0) and not cfg.mla_kv_lora_rank
+    # decode with batch=1: shard sequence as much as possible
+    if shape.global_batch == 1 and s_kv > 4096:
+        seq_ax: object = ("data", "model")
+        kv_on_model = False
+    elif hd_sharded:
+        # HC2-2: decode caches shard the HEAD DIM (or MLA latent rank); the
+        # sequence stays unsharded so the 1-token .at[].set write stays a
+        # cheap sharded in-place scatter. Attention contracts the sharded
+        # dim -> one small all-reduce of scores/outputs per layer.
+        seq_ax = None
+        kv_on_model = False
+    else:
+        seq_ax = "model" if not kv_on_model else None
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        if name == "pos":
+            return P(b_ax, seq_ax if not kv_on_model else None)
+        if name in ("k", "v"):                     # [L,B,S,kv,hd]
+            if hd_sharded:
+                return P(None, b_ax, None, None, "model")
+            return P(None, b_ax, seq_ax, "model" if kv_on_model else None, None)
+        if name in ("ckv", "kpe"):                 # [L,B,S,r]
+            if hd_sharded:
+                return P(None, b_ax, None, "model")
+            return P(None, b_ax, seq_ax, None)
+        if name == "h":                            # [L,B,H,P,N]
+            d_model_ok = leaf.shape[2] % n_dev_model == 0
+            return P(None, b_ax, "model" if d_model_ok else None, None, None)
+        if name == "conv":                         # [L,B,W-1,C]
+            ok = leaf.shape[3] % n_dev_model == 0
+            return P(None, b_ax, None, "model" if ok else None)
+        if name in ("cross_k", "cross_v"):         # [L,B,S_enc,kv,hd]
+            return P(None, b_ax, None, "model" if kv_on_model else None, None)
+        return P(*([None] * nd))
+
+    from repro.models.sharding import divisible_spec
+
+    abstract = jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch, s_kv))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, divisible_spec(spec(p, l), l.shape, mesh)),
+        abstract), abstract
+
+
+def make_serve_specs(cfg: ModelConfig, shape: InputShape, mesh, *,
+                     multi_pod: bool, scan_unroll: bool = False):
+    """Returns (step_fn, arg_specs tuple) for prefill/decode shapes."""
+    assert shape.kind in ("prefill", "decode")
+    model, window_override = build_dryrun_model(cfg, shape, scan_unroll)
+    rules = sharding_rules(multi_pod, cfg)
+    seq_in_ax = rules.get("seq") if shape.kind == "prefill" else None
+    b = shape.global_batch
+    b_ax = batch_axes(multi_pod) if b > 1 else None
+    s_q = 1 if shape.kind == "decode" else shape.seq_len
+    s_kv = cache_seq_len(cfg, shape, window_override)
+
+    # HC2-2 (§Perf, REFUTED): head-dim-sharded decode caches + true scatter
+    # writes looked ideal on paper (O(1) write bytes, small score
+    # all-reduces), but GSPMD cannot keep the hd-sharded scatter sharded
+    # (the updates' post-reshape sharding is unrepresentable) and falls back
+    # to all-gathering the cache: collective 2.8 ms -> 2664 ms on
+    # deepseek-coder-33b decode_32k. Kept behind an env flag for the record;
+    # default stays sequence-sharded + select writes.
+    import os as _os
+    n_model = mesh.shape["model"]
+    hd_div = ((cfg.mla_kv_lora_rank % n_model == 0) if cfg.mla_kv_lora_rank
+              else (cfg.head_dim % n_model == 0))
+    hd_sharded = (_os.environ.get("REPRO_HD_SHARDED_DECODE") == "1"
+                  and shape.kind == "decode" and b > 1
+                  and s_kv == shape.seq_len and hd_div
+                  and cfg.arch_type != "ssm")
+    if hd_sharded:
+        model = build_model(cfg, window_override=window_override,
+                            scan_unroll=scan_unroll, decode_write="scatter")
+
+    abstract_params = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    # serving deployment contract: weights shipped in bf16
+    abstract_params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if (s.dtype == jnp.float32 and len(s.shape) >= 2)
+            else s.dtype),
+        abstract_params)
+    p_shard = params_sharding_tree(abstract_params, mesh, rules)
+    params_spec = _with_sharding(abstract_params, p_shard)
+
+    cache_shard, cache_abs = _cache_shardings(model, cfg, mesh, shape, s_kv,
+                                              multi_pod,
+                                              hd_sharded=hd_sharded)
+    cache_spec = _with_sharding(cache_abs, cache_shard)
+
+    # enc-dec (whisper): the *encoder* consumes stub embeddings; the decoder
+    # (what prefill/decode shapes lower) takes token ids. Only decoder-only
+    # embedding-input archs (VLM) feed embeddings at prefill.
+    if cfg.embeddings_input and not cfg.enc_dec and shape.kind == "prefill":
+        tok_spec = jax.ShapeDtypeStruct(
+            (b, s_q, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(b_ax, seq_in_ax, None)))
+    else:
+        tok_spec = jax.ShapeDtypeStruct(
+            (b, s_q), jnp.int32,
+            sharding=NamedSharding(mesh, P(b_ax, seq_in_ax)))
+    len_spec = jax.ShapeDtypeStruct((b,), jnp.int32,
+                                    sharding=NamedSharding(mesh, P(None)))
+    kvpos_sharding = jax.tree.leaves(
+        cache_shard, is_leaf=lambda x: isinstance(x, NamedSharding))[0]
+    # kv_positions aligned with cache['pos'] sharding
+    pos_shard = cache_shard["pos"]
+    kvpos_spec = jax.ShapeDtypeStruct((b, max(s_kv, 1)), jnp.int32,
+                                      sharding=pos_shard)
+
+    decode = shape.kind == "decode"
+
+    def step(params, cache, tokens, cache_len, kv_positions):
+        logits, new_cache, _ = model.forward(
+            params, tokens, cache, cache_len, kv_positions=kv_positions,
+            decode=decode)
+        return logits, new_cache
+
+    return step, (params_spec, cache_spec, tok_spec, len_spec, kvpos_spec)
+
+
+def make_train_specs(cfg: ModelConfig, shape: InputShape, mesh, *,
+                     multi_pod: bool, scan_unroll: bool = False):
+    assert shape.kind == "train"
+    model = build_model(cfg, remat=True, scan_unroll=scan_unroll)
+    rules = sharding_rules(multi_pod, cfg)
+    b = shape.global_batch
+    b_ax = batch_axes(multi_pod)
+
+    abstract_params = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    p_shard = params_sharding_tree(abstract_params, mesh, rules)
+    params_spec = _with_sharding(abstract_params, p_shard)
+
+    abstract_opt = jax.eval_shape(lambda: init_adamw(abstract_params))
+    opt_shard = {
+        "step": NamedSharding(mesh, P()),
+        "m": p_shard,
+        "v": p_shard,
+    }
+    opt_spec = _with_sharding(abstract_opt, opt_shard)
+
+    batch_spec = {
+        "tokens": jax.ShapeDtypeStruct(
+            (b, shape.seq_len + 1), jnp.int32,
+            sharding=NamedSharding(mesh, P(b_ax, None))),
+    }
+    if cfg.enc_dec:
+        batch_spec["enc_emb"] = jax.ShapeDtypeStruct(
+            (b, WHISPER_TRAIN_ENC_LEN, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(b_ax, None, None)))
+
+    opt_cfg = AdamWConfig()
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, _ = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step, (params_spec, opt_spec, batch_spec)

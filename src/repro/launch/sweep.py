@@ -1,0 +1,78 @@
+"""Dry-run sweep driver: subprocess per (arch x shape x mesh) — each run
+needs a fresh process because XLA_FLAGS locks the host device count.
+
+  PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun \
+      [--multi-pod] [--archs a,b] [--shapes x,y] [--no-calibrate]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES
+
+ASSIGNED = [a for a in ARCH_IDS if a not in ("llama3-8b", "qwen2-7b")]
+
+
+def run_subprocess(arch: str, shape: str, multi_pod: bool, out_dir: str,
+                   timeout: int = 3600) -> dict:
+    tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}"
+    out_file = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_file):
+        with open(out_file) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out_file]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    t0 = time.time()
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                          env={**os.environ, "PYTHONPATH": "src"})
+    if proc.returncode != 0 or not os.path.exists(out_file):
+        err = proc.stderr.strip().splitlines()
+        report = {"arch": arch, "shape": shape,
+                  "mesh": "2x16x16" if multi_pod else "16x16",
+                  "status": "fail", "wall_s": round(time.time() - t0, 1),
+                  "error": err[-3:] if err else ["unknown"]}
+        with open(out_file, "w") as f:
+            json.dump(report, f, indent=2)
+        return report
+    with open(out_file) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--archs", default=",".join(ASSIGNED))
+    ap.add_argument("--shapes", default=",".join(INPUT_SHAPES))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in args.archs.split(","):
+        for shape in args.shapes.split(","):
+            for mp in meshes:
+                t0 = time.time()
+                r = run_subprocess(arch, shape, mp, args.out)
+                status = r.get("status")
+                bn = r.get("bottleneck", "-")
+                print(f"{arch:22s} {shape:12s} {'2x16x16' if mp else '16x16':8s}"
+                      f" {status:4s} [{time.time()-t0:5.0f}s] bound={bn}",
+                      flush=True)
+                results.append(r)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\n{n_ok}/{len(results)} OK")
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(results, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

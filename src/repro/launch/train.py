@@ -1,0 +1,41 @@
+"""Training launcher (CPU-scale functional training on reduced configs;
+the full-scale distributed train_step is exercised via dryrun.py).
+
+Example (trains a ~3M-param reduced llama for a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training import AdamWConfig, Trainer, save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg, exact_moe=True)
+    trainer = Trainer(model,
+                      AdamWConfig(lr=args.lr, warmup_steps=args.steps // 10,
+                                  total_steps=args.steps),
+                      batch_size=args.batch_size, seq_len=args.seq_len)
+    params, opt = trainer.init()
+    params, opt, losses = trainer.run(params, opt, args.steps, log_every=20)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt, args.steps)
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

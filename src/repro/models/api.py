@@ -1,0 +1,26 @@
+"""Unified model construction: ``build_model(cfg)`` -> DecoderModel | EncDecModel.
+
+Every model exposes:
+  init_params(key) -> params
+  init_cache(batch, s_kv) -> cache
+  forward(params, inputs, cache, cache_len, positions=..., decode=..., train=...)
+  loss(params, batch)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import DecoderModel
+
+
+def build_model(cfg: ModelConfig, *, exact_moe: bool = False,
+                window_override: Optional[int] = None, remat: bool = True,
+                scan_unroll: bool = False, decode_write: str = "select"):
+    if cfg.enc_dec:
+        return EncDecModel(cfg, window_override=window_override, remat=remat,
+                           scan_unroll=scan_unroll)
+    return DecoderModel(cfg, exact_moe=exact_moe,
+                        window_override=window_override, remat=remat,
+                        scan_unroll=scan_unroll, decode_write=decode_write)

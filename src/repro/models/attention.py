@@ -1,0 +1,351 @@
+"""Attention: GQA with unified cache (full or ring), sliding windows, qk-norm,
+MLA (DeepSeek-V2 latent attention), encoder/cross attention.
+
+Unified cache semantics
+-----------------------
+A layer's KV cache is ``{'k': [B, S_kv, Kv, D], 'v': [B, S_kv, Kv, D]}`` plus
+a *shared* (cross-layer) position buffer ``kv_pos [B, S_kv]`` initialised to
+-1. New tokens are written at ``idx = (cache_len + arange(S_q)) % S_kv`` —
+when ``S_kv`` is smaller than the sequence this is a ring buffer (sliding-
+window variant); masks are derived purely from stored positions, so full and
+ring caches share one code path:
+
+    valid(q_pos, kv_pos) = kv_pos >= 0 and kv_pos <= q_pos
+                           and (window == 0 or kv_pos > q_pos - window)
+
+This one predicate implements causal masking, chunked-prefill context
+masking, ring-buffer validity and sliding windows simultaneously.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+from repro.models.rope import position_encode
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla_kv_lora_rank:
+        return _init_mla(key, cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kv * hd)),
+        "wv": dense_init(ks[2], (d, kv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    r_kv, r_q = cfg.mla_kv_lora_rank, cfg.mla_q_lora_rank
+    hd_n, hd_r, hd_v = cfg.mla_nope_head_dim, cfg.mla_rope_head_dim, cfg.mla_v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], (d, r_kv)),
+        "w_kpe": dense_init(ks[1], (d, hd_r)),
+        "kv_norm": init_rmsnorm(r_kv),
+        "w_uk": dense_init(ks[2], (r_kv, h, hd_n)),
+        "w_uv": dense_init(ks[3], (r_kv, h, hd_v)),
+        "wo": dense_init(ks[4], (h * hd_v, d)),
+    }
+    if r_q:
+        p["w_dq"] = dense_init(ks[5], (d, r_q))
+        p["q_norm"] = init_rmsnorm(r_q)
+        p["w_uq"] = dense_init(ks[6], (r_q, h, hd_n + hd_r))
+    else:
+        p["wq"] = dense_init(ks[5], (d, h, hd_n + hd_r))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cache write helper
+# ---------------------------------------------------------------------------
+
+import os
+
+# Cache-write strategy. "select" (default) writes via gather-from-new +
+# where over an iota of the cache sequence axis: fully elementwise in the
+# (possibly sequence-sharded) cache, so GSPMD keeps the KV cache sharded.
+# "scatter" is the naive .at[].set() — data-dependent scatter indices force
+# GSPMD to all-gather a sequence-sharded cache (measured: llama3-8b
+# decode_32k went from 451 ms collective / 28.7 GB temp to ~0 — see
+# EXPERIMENTS.md §Perf).
+WRITE_MODE = os.environ.get("REPRO_CACHE_WRITE", "select")
+
+
+def write_indices(cache_len, s_q: int, s_kv: int):
+    """cache_len: [B] int32. Returns idx [B, s_q] (ring-modular, contiguous)."""
+    return (cache_len[:, None] + jnp.arange(s_q, dtype=jnp.int32)[None, :]) % s_kv
+
+
+def scatter_tokens(buf, new, idx, mode=None):
+    """buf [B, S_kv, ...], new [B, S_q, ...], idx [B, S_q] (contiguous mod
+    S_kv, from write_indices) -> updated buf.
+
+    mode="scatter": true .at[].set — O(S_q) bytes written, in-place under
+    donation, and GSPMD-shardable as long as the SEQUENCE dim of `buf` is
+    unsharded (pair with head-dim-sharded decode caches; §Perf HC2-2).
+    mode="select": gather+where over an iota — O(S_kv) bytes but fully
+    elementwise, so it tolerates sequence-sharded caches (prefill chunks,
+    long-context ring buffers)."""
+    if (mode or WRITE_MODE) == "scatter":
+        b = jnp.arange(buf.shape[0])[:, None]
+        return buf.at[b, idx].set(new.astype(buf.dtype))
+    bsz, s_kv = buf.shape[0], buf.shape[1]
+    c = new.shape[1]
+    if c == 1:
+        # decode fast path (§Perf HC2-3): broadcast-compare + where, no
+        # take_along_axis gather temp — one fused pass over the cache
+        hit = (jnp.arange(s_kv, dtype=jnp.int32)[None, :] == idx)  # [B,S]
+        hit = hit.reshape(hit.shape + (1,) * (new.ndim - 2))
+        return jnp.where(hit, new.astype(buf.dtype), buf)
+    start = idx[:, 0]                                     # [B]
+    j = (jnp.arange(s_kv, dtype=jnp.int32)[None, :]
+         - start[:, None]) % s_kv                         # [B, S_kv]
+    valid = j < c
+    jc = jnp.minimum(j, c - 1)
+    idx_full = jc.reshape(jc.shape + (1,) * (new.ndim - 2))
+    upd = jnp.take_along_axis(new.astype(buf.dtype),
+                              jnp.broadcast_to(idx_full, (bsz, s_kv) + new.shape[2:]),
+                              axis=1)
+    mask = valid.reshape(valid.shape + (1,) * (new.ndim - 2))
+    return jnp.where(mask, upd, buf)
+
+
+# ---------------------------------------------------------------------------
+# masking + core softmax-attention
+# ---------------------------------------------------------------------------
+
+def make_mask(q_pos, kv_pos, window, causal: bool = True):
+    """q_pos [B,Sq], kv_pos [B,Skv], window scalar (0=full) -> [B,1,Sq,Skv] bool."""
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    valid = k >= 0
+    if causal:
+        valid &= k <= q
+    win_ok = jnp.where(window > 0, k > q - window, True)
+    return (valid & win_ok)[:, None, :, :]
+
+
+def gqa_attend(q, k, v, mask, scale):
+    """q [B,Sq,H,D]; k,v [B,Skv,Kv,D]; mask [B,1,Sq,Skv] -> [B,Sq,H,D].
+
+    fp32 accumulation happens inside the dots (preferred_element_type), NOT
+    by casting K/V up front — casting would materialize an fp32 copy of the
+    whole KV cache each decode step (measured 2x memory-term inflation on
+    deepseek-coder-33b decode_32k; EXPERIMENTS.md §Perf HC2-1)."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[:, :, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def blocked_gqa_attend(q, k, v, q_pos, kv_pos, window, scale,
+                       block_q: int = 512, block_k: int = 1024):
+    """Flash-style attention in pure XLA (§Perf HC-prefill): lax.scan over
+    KV blocks with running (m, l, acc), queries processed in blocks — the
+    O(Sq x Skv) score matrix is never materialized. Same math as
+    ``gqa_attend``+``make_mask`` (position-validity, causal, window).
+
+    q [B,Sq,H,D]; k,v [B,Skv,Kv,D]; q_pos [B,Sq]; kv_pos [B,Skv].
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    nq, nk = (sq + pad_q) // bq, (skv + pad_k) // bk
+
+    qb = q.reshape(b, nq, bq, kvh, g, dh)
+    qpb = q_pos.reshape(b, nq, bq)
+    kb = jnp.moveaxis(k.reshape(b, nk, bk, kvh, dh), 1, 0)    # [nk,B,bk,Kv,D]
+    vb = jnp.moveaxis(v.reshape(b, nk, bk, kvh, dh), 1, 0)
+    kpb = jnp.moveaxis(kv_pos.reshape(b, nk, bk), 1, 0)       # [nk,B,bk]
+
+    def kv_step(carry, inp):
+        m, l, acc = carry            # m,l [B,nq,Kv,g,bq]; acc [...,bq,D]
+        kblk, vblk, kp = inp
+        s = jnp.einsum("bnqkgd,bskd->bnkgqs", qb, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        qp = qpb[:, :, None, None, :, None]                   # [B,nq,1,1,bq,1]
+        kpx = kp[:, None, None, None, None, :]                # [B,1,1,1,1,bk]
+        valid = (kpx >= 0) & (kpx <= qp) & (qp >= 0)
+        valid &= jnp.where(window > 0, kpx > qp - window, True)
+        s = jnp.where(valid, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bnkgqs,bskd->bnkgqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), 0
+
+    m0 = jnp.full((b, nq, kvh, g, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nq, kvh, g, bq), jnp.float32)
+    a0 = jnp.zeros((b, nq, kvh, g, bq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb))
+    safe = jnp.where(l == 0.0, 1.0, l)
+    out = acc / safe[..., None]                               # [B,nq,Kv,g,bq,D]
+    out = jnp.moveaxis(out, 4, 2).reshape(b, nq * bq, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+# score-matrix size above which attention switches to the blocked path
+# (keeps small/CPU-engine shapes on the exact-bit path used by the oracles)
+BLOCKED_ATTN_THRESHOLD = 1 << 22
+
+
+# ---------------------------------------------------------------------------
+# GQA block with cache
+# ---------------------------------------------------------------------------
+
+def attention_block(p, cfg, x, positions, kv_pos, idx, layer_cache, window,
+                    write_mode=None):
+    """Self-attention with unified cache.
+
+    x [B,Sq,d]; positions [B,Sq] (absolute); kv_pos [B,S_kv] (post-write,
+    shared across layers); idx [B,Sq] write slots; layer_cache {'k','v'};
+    window: traced int32 scalar (0 = full attention).
+    Returns (out [B,Sq,d], new_layer_cache).
+    """
+    b, sq, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, sq, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, sq, kvh, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, sq, kvh, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = position_encode(q, positions, cfg)
+    k = position_encode(k, positions, cfg)
+
+    if layer_cache is None:  # cache-free (training) path: no scatter writes
+        ck, cv = k, v
+        new_cache = None
+    else:
+        ck = scatter_tokens(layer_cache["k"], k, idx, mode=write_mode)
+        cv = scatter_tokens(layer_cache["v"], v, idx, mode=write_mode)
+        new_cache = {"k": ck, "v": cv}
+    if sq * ck.shape[1] >= BLOCKED_ATTN_THRESHOLD and sq > 1:
+        out = blocked_gqa_attend(q, ck, cv, positions, kv_pos, window,
+                                 hd ** -0.5)
+    else:
+        mask = make_mask(positions, kv_pos, window)
+        out = gqa_attend(q, ck, cv, mask, hd ** -0.5)
+    out = out.reshape(b, sq, h * hd) @ p["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2): cache stores the compressed latent + rope key.
+# Uses the weight-absorbed formulation for both prefill and decode so that a
+# single code path serves chunked prefill (partial KV present) and decode.
+# ---------------------------------------------------------------------------
+
+def mla_attention_block(p, cfg, x, positions, kv_pos, idx, layer_cache,
+                        window, write_mode=None):
+    b, sq, d = x.shape
+    h = cfg.n_heads
+    hd_n, hd_r = cfg.mla_nope_head_dim, cfg.mla_rope_head_dim
+    hd_v = cfg.mla_v_head_dim
+
+    c_kv = rmsnorm(x @ p["w_dkv"].astype(x.dtype), p["kv_norm"], cfg.norm_eps)
+    k_pe = (x @ p["w_kpe"].astype(x.dtype)).reshape(b, sq, 1, hd_r)
+    k_pe = position_encode(k_pe, positions, cfg)[:, :, 0, :]
+
+    if cfg.mla_q_lora_rank:
+        q_lat = rmsnorm(x @ p["w_dq"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bshe", q_lat, p["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    q_nope, q_pe = q[..., :hd_n], q[..., hd_n:]
+    q_pe = position_encode(q_pe, positions, cfg)
+
+    if layer_cache is None:  # cache-free (training) path
+        cckv, ckpe = c_kv, k_pe
+        new_cache = None
+    else:
+        cckv = scatter_tokens(layer_cache["ckv"], c_kv, idx, mode=write_mode)
+        ckpe = scatter_tokens(layer_cache["kpe"], k_pe, idx, mode=write_mode)
+        new_cache = {"ckv": cckv, "kpe": ckpe}
+
+    # absorb W_uk into q: scores over the latent directly
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    scale = (hd_n + hd_r) ** -0.5
+    scores = (jnp.einsum("bshr,btr->bhst", q_abs, cckv.astype(jnp.float32))
+              + jnp.einsum("bshp,btp->bhst", q_pe.astype(jnp.float32),
+                           ckpe.astype(jnp.float32))) * scale
+    mask = make_mask(positions, kv_pos, window)        # [B,1,Sq,Skv]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, cckv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", out_lat, p["w_uv"].astype(jnp.float32))
+    out = out.reshape(b, sq, h * hd_v).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# encoder (bidirectional, no cache) and cross attention — whisper backbone
+# ---------------------------------------------------------------------------
+
+def encoder_attention(p, cfg, x, positions):
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, kvh, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, kvh, hd)
+    q = position_encode(q, positions, cfg)
+    k = position_encode(k, positions, cfg)
+    mask = jnp.ones((b, 1, s, s), bool)
+    out = gqa_attend(q, k, v, mask, hd ** -0.5)
+    return out.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+
+
+def cross_attention(p, cfg, x, k_enc, v_enc):
+    """x [B,Sq,d]; k_enc/v_enc [B,S_enc,Kv,D] (precomputed at prefill)."""
+    b, sq, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, sq, h, hd)
+    mask = jnp.ones((b, 1, sq, k_enc.shape[1]), bool)
+    out = gqa_attend(q, k_enc, v_enc, mask, hd ** -0.5)
+    return out.reshape(b, sq, h * hd) @ p["wo"].astype(x.dtype)
+
+
+def cross_kv(p, cfg, enc_out):
+    b, s, d = enc_out.shape
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, s, kvh, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, s, kvh, hd)
+    return k, v

@@ -1,0 +1,194 @@
+"""Encoder-decoder backbone (Whisper-style). Conv/mel frontend is a stub:
+the encoder consumes precomputed frame embeddings ``[B, S_enc, d]``.
+
+Decoder layers: self-attention (cached, causal) -> cross-attention over the
+encoder output (KV precomputed once at prefill and held in the cache — so a
+partially-disaggregated prefill ships cross-KV + the self-KV prefix) -> MLP.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (dense_init, init_mlp, init_rmsnorm, rmsnorm,
+                                 stack_layers, swiglu)
+from repro.models.sharding import maybe_shard
+
+
+class EncDecModel:
+    def __init__(self, cfg, *, window_override: Optional[int] = None,
+                 remat: bool = True, exact_moe: bool = False,
+                 scan_unroll: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+        self.scan_unroll = scan_unroll
+        if window_override is not None:
+            widths = [window_override] * cfg.n_layers
+        else:
+            widths = [cfg.layer_window(i) for i in range(cfg.n_layers)]
+        self.widths = jnp.array(widths, jnp.int32)
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------
+    def _init_enc_layer(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {
+            "ln1": init_rmsnorm(cfg.d_model),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln2": init_rmsnorm(cfg.d_model),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        }
+
+    def _init_dec_layer(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        return {
+            "ln1": init_rmsnorm(cfg.d_model),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln_cross": init_rmsnorm(cfg.d_model),
+            "cross": attn.init_attention(ks[1], cfg),
+            "ln2": init_rmsnorm(cfg.d_model),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+        }
+
+    def init_params(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2 + cfg.n_enc_layers + cfg.n_layers)
+        return {
+            "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), scale=0.02),
+            "head": dense_init(ks[1], (cfg.d_model, cfg.vocab_size)),
+            "enc_final_norm": init_rmsnorm(cfg.d_model),
+            "final_norm": init_rmsnorm(cfg.d_model),
+            "enc_layers": stack_layers(
+                [self._init_enc_layer(ks[2 + i]) for i in range(cfg.n_enc_layers)]),
+            "layers": stack_layers(
+                [self._init_dec_layer(ks[2 + cfg.n_enc_layers + i])
+                 for i in range(cfg.n_layers)]),
+        }
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, s_kv: int, s_enc: Optional[int] = None):
+        cfg = self.cfg
+        s_enc = s_enc or cfg.enc_seq_len
+        kvh, hd, l = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+        return {
+            "pos": jnp.full((batch, s_kv), -1, jnp.int32),
+            "stack": {
+                "k": jnp.zeros((l, batch, s_kv, kvh, hd), self.dtype),
+                "v": jnp.zeros((l, batch, s_kv, kvh, hd), self.dtype),
+            },
+            "cross_k": jnp.zeros((l, batch, s_enc, kvh, hd), self.dtype),
+            "cross_v": jnp.zeros((l, batch, s_enc, kvh, hd), self.dtype),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params, enc_emb, train: bool = False):
+        """enc_emb [B, S_enc, d] (frontend stub output) -> enc_out."""
+        cfg = self.cfg
+        x = enc_emb.astype(self.dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(xc, lp):
+            h = rmsnorm(xc, lp["ln1"], cfg.norm_eps)
+            xc = xc + attn.encoder_attention(lp["attn"], cfg, h, positions)
+            h2 = rmsnorm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                             lp["mlp"]["w_down"])
+            return xc, 0.0
+
+        if train and self.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                            unroll=True if self.scan_unroll else 1)
+        return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    def compute_cross_kv(self, params, enc_out):
+        """Per-layer cross K/V from encoder output (stacked over layers)."""
+        cfg = self.cfg
+        b, s, _ = enc_out.shape
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        wk = params["layers"]["cross"]["wk"].astype(enc_out.dtype)  # [L,d,kv*hd]
+        wv = params["layers"]["cross"]["wv"].astype(enc_out.dtype)
+        ck = jnp.einsum("bsd,lde->lbse", enc_out, wk).reshape(-1, b, s, kvh, hd)
+        cv = jnp.einsum("bsd,lde->lbse", enc_out, wv).reshape(-1, b, s, kvh, hd)
+        return ck, cv
+
+    # ------------------------------------------------------------------
+    def forward(self, params, inputs, cache, cache_len, *, positions=None,
+                kv_positions=None, enc_out=None, decode: bool = False,
+                train: bool = False):
+        """Decoder forward. inputs: token ids [B,S]. If ``enc_out`` is given
+        (first prefill chunk), cross-KV is (re)computed and written to the
+        cache; otherwise it is read from the cache."""
+        cfg = self.cfg
+        x = params["embed"].astype(self.dtype)[inputs]
+        x = maybe_shard(x, "batch", "seq", None)
+        b, s, _ = x.shape
+        if positions is None:
+            positions = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+
+        if enc_out is not None:
+            cross_k, cross_v = self.compute_cross_kv(params, enc_out)
+        else:
+            cross_k, cross_v = cache["cross_k"], cache["cross_v"]
+
+        if train:
+            kv_pos, idx = positions, None
+            stack_cache = {"_none": jnp.zeros((cfg.n_layers,), jnp.float32)}
+        else:
+            s_kv = cache["pos"].shape[1]
+            idx = attn.write_indices(cache_len, s, s_kv)
+            if kv_positions is None:
+                kv_pos = attn.scatter_tokens(cache["pos"], positions, idx)
+            else:
+                kv_pos = kv_positions
+            stack_cache = cache["stack"]
+
+        def body(carry, xs):
+            xc = carry
+            lp, lc, width, ck_l, cv_l = xs
+            h = rmsnorm(xc, lp["ln1"], cfg.norm_eps)
+            a_out, new_lc = attn.attention_block(
+                lp["attn"], cfg, h, positions, kv_pos, idx,
+                None if train else lc, width)
+            xc = xc + a_out
+            hc = rmsnorm(xc, lp["ln_cross"], cfg.norm_eps)
+            xc = xc + attn.cross_attention(lp["cross"], cfg, hc, ck_l, cv_l)
+            h2 = rmsnorm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                             lp["mlp"]["w_down"])
+            return xc, (0.0 if train else new_lc)
+
+        if train and self.remat:
+            body = jax.checkpoint(body)
+        x, new_stack = jax.lax.scan(
+            body, x, (params["layers"], stack_cache, self.widths,
+                      cross_k, cross_v),
+            unroll=True if self.scan_unroll else 1)
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["head"].astype(x.dtype)
+        logits = maybe_shard(logits, "batch", "seq", "vocab")
+        new_cache = None
+        if not train:
+            new_cache = {"pos": kv_pos, "stack": new_stack,
+                         "cross_k": cross_k, "cross_v": cross_v}
+        return logits, new_cache, jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch):
+        """batch: {'enc_emb': [B,S_enc,d], 'tokens': [B,S+1]}."""
+        enc_out = self.encode(params, batch["enc_emb"], train=True)
+        inputs, labels = batch["tokens"][:, :-1], batch["tokens"][:, 1:]
+        b = inputs.shape[0]
+        logits, _, _ = self.forward(params, inputs, None,
+                                    jnp.zeros((b,), jnp.int32),
+                                    enc_out=enc_out, train=True)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return nll.mean()

@@ -1,0 +1,53 @@
+"""Basic layers: RMSNorm, SwiGLU MLP, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (stored fp32; cast at use-site)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * std)
+
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def init_rmsnorm(d: int):
+    # stored as delta from 1.0 (gemma-style), init 0
+    return jnp.zeros((d,), jnp.float32)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP. x:[...,d]; w_gate/w_up:[d,f]; w_down:[f,d]."""
+    h = jax.nn.silu(x @ w_gate.astype(x.dtype)) * (x @ w_up.astype(x.dtype))
+    return h @ w_down.astype(x.dtype)
+
+
+def init_mlp(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f)),
+        "w_up": dense_init(k2, (d, f)),
+        "w_down": dense_init(k3, (f, d)),
+    }
+
+
+def embed(tokens, table, dtype):
+    return table.astype(dtype)[tokens]
+
+
+def unembed(x, table):
+    return x @ table.astype(x.dtype).T
+
+
+def stack_layers(per_layer_params):
+    """Stack a list of identical pytrees into one pytree with leading L dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer_params)

@@ -1,0 +1,63 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions [...,], returns (sin, cos) of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [B, S, H, D]; positions: [B, S] -> rotated x (pairs = (even, odd halves))."""
+    d = x.shape[-1]
+    sin, cos = _rope_angles(positions, d, theta)       # [B,S,half]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Tuple[int, ...], theta: float = 1_000_000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, D]; positions3: [B, S, 3] (t, h, w) positions;
+    sections: per-axis number of frequency PAIRS, sum(sections) == D//2.
+    Text tokens use identical (t,h,w) which reduces to standard RoPE.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, d)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # pick which position axis drives each frequency band
+    axis_id = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )                                                   # [half]
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                 # [B,S,3]
+        jnp.broadcast_to(axis_id, positions3.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )                                                   # [B,S,half]
+    ang = pos * freqs
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_encode(x, positions, cfg):
+    """Dispatch RoPE flavour from a ModelConfig."""
+    if cfg.mrope_sections:
+        if positions.ndim == 2:  # text-only: (t,h,w) all equal
+            positions3 = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+        else:
+            positions3 = positions
+        return apply_mrope(x, positions3, cfg.mrope_sections, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)

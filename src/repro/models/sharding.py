@@ -1,0 +1,118 @@
+"""Logical-axis sharding rules applied inside model code + name-based param specs.
+
+The launcher installs a mapping from logical axis names to mesh axis names
+via ``set_rules``; model code calls ``maybe_shard(x, 'batch', None, 'heads')``
+at key activation points. With no rules installed (unit tests, single
+device) these are no-ops.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: Optional[dict] = None
+_MESH = None
+
+
+def set_rules(rules: Optional[dict], mesh=None):
+    global _RULES, _MESH
+    _RULES = rules
+    _MESH = mesh
+
+
+def get_rules():
+    return _RULES
+
+
+def get_mesh():
+    return _MESH
+
+
+def maybe_shard(x, *logical_axes):
+    if _RULES is None:
+        return x
+    spec = P(*[_RULES.get(a) if a else None for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# name-based parameter partition specs
+# ---------------------------------------------------------------------------
+
+def _base_spec(name: str, ndim: int, rules: dict, is_expert: bool = False) -> P:
+    m = rules.get("model")
+    table = {
+        # attention
+        "wq": P(None, m), "wk": P(None, m), "wv": P(None, m), "wo": P(m, None),
+        # MLA
+        "w_dkv": P(None, None), "w_kpe": P(None, None),
+        "w_uk": P(None, m, None), "w_uv": P(None, m, None),
+        "w_dq": P(None, None), "w_uq": P(None, m, None),
+        # mlp
+        "w_gate": P(None, m), "w_up": P(None, m), "w_down": P(m, None),
+        # moe (expert-parallel)
+        "router": P(None, m),
+        # embeddings
+        "embed": P(m, None), "head": P(None, m),
+        # ssm
+        "in_proj": P(None, m), "out_proj": P(m, None),
+        "conv_w": P(None, m), "conv_b": P(m),
+    }
+    spec = table.get(name)
+    if spec is None:
+        return P(*([None] * ndim))
+    if is_expert and name in ("w_gate", "w_up", "w_down"):
+        # expert-stacked weights [..., E, d, f]: shard the expert dim
+        return P(m, None, None)
+    return spec
+
+
+def param_pspec(path: tuple, leaf, rules: dict) -> P:
+    """path: tuple of keys from tree_flatten_with_path; leaf: array/shape."""
+    names = [getattr(k, "key", None) for k in path]
+    names = [n for n in names if isinstance(n, str)]
+    name = names[-1] if names else None
+    is_expert = "moe" in names and "shared_" not in " ".join(names)
+    ndim = len(leaf.shape)
+    if name is None:
+        return P(*([None] * ndim))
+    base = _base_spec(name, ndim, rules, is_expert=is_expert)
+    # account for extra leading stacking dims (layers, shared experts...)
+    extra = ndim - len(base)
+    if extra > 0:
+        return P(*([None] * extra + list(base)))
+    if extra < 0:  # scalar-ish leaves
+        return P(*([None] * ndim))
+    return base
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def divisible_spec(spec: P, shape, mesh) -> P:
+    """Drop sharding on any dim the mesh axes don't evenly divide."""
+    fixed = []
+    for i, axis in enumerate(spec):
+        n = _axis_size(mesh, axis)
+        fixed.append(axis if (n > 1 and shape[i] % n == 0) or n == 1 else None)
+    return P(*fixed)
+
+
+def params_sharding_tree(params_or_shapes, mesh, rules: dict):
+    from jax.sharding import NamedSharding
+
+    def one(path, leaf):
+        spec = param_pspec(path, leaf, rules)
+        return NamedSharding(mesh, divisible_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params_or_shapes)

@@ -1,0 +1,209 @@
+"""Mamba2 / SSD (state-space duality) blocks, chunked-scan + recurrent decode.
+
+The SSD chunked algorithm (arXiv:2405.21060, Alg. "SSD") splits the sequence
+into chunks of length Q: intra-chunk terms computed as attention-like
+matmuls (the duality — these hit the MXU), inter-chunk terms via a small
+recurrence over chunk states. The scan carries an initial state ``h0`` which
+is exactly what partially-disaggregated prefill needs: the PPI ships its SSM
+state (tiny: [H, P, N]) instead of a KV prefix, and the CPI's chunked prefill
+resumes the scan from it.
+
+Cache layout per layer: ``{'h': [B, H, P, N] fp32, 'conv': [B, W-1, Dconv]}``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = cfg.ssm_n_heads or max(1, d_inner // cfg.ssm_head_dim)
+    p = d_inner // n_heads
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n          # conv over (x, B, C), G=1 group
+    return d_inner, n_heads, p, n, conv_dim
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    d_inner, h, p, n, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_inner + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_dim), scale=0.3),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        "gate_norm": init_rmsnorm(d_inner),
+        "out_proj": dense_init(ks[2], (d_inner, d)),
+    }
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d_inner, h, p, n, conv_dim = ssm_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, a_neg, b_in, c_in, h0, chunk: int):
+    """x [B,S,H,P]; dt [B,S,H] (>0); a_neg [H] (<0); b_in,c_in [B,S,N];
+    h0 [B,H,P,N]. Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    a = dtc * a_neg                                      # [B,nc,Q,H] log-decay
+    a_cum = jnp.cumsum(a, axis=2)                        # inclusive
+    xdt = xc * dtc[..., None]                            # [B,nc,Q,H,P]
+
+    # intra-chunk (the "duality" matmuls)
+    l_mat = jnp.exp(a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :])  # [B,nc,Q,K,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None], l_mat, 0.0)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, l_mat, xdt)
+
+    # chunk states
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # [B,nc,Q,H]
+    states = jnp.einsum("bckh,bckn,bckhp->bchpn", decay_to_end, bc, xdt)
+
+    # inter-chunk recurrence
+    a_sum = a_cum[:, :, -1, :]                           # [B,nc,H]
+    st_t = jnp.moveaxis(states, 1, 0)                    # [nc,B,H,P,N]
+    as_t = jnp.moveaxis(a_sum, 1, 0)                     # [nc,B,H]
+
+    def step(hprev, inp):
+        s_c, asum = inp
+        hnew = hprev * jnp.exp(asum)[:, :, None, None] + s_c
+        return hnew, hprev
+
+    h_final, h_prevs = jax.lax.scan(step, h0.astype(jnp.float32), (st_t, as_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, h_prevs, jnp.exp(a_cum))
+    y = (y_intra + y_inter).reshape(bsz, sp, h, p)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_ref(x, dt, a_neg, b_in, c_in, h0):
+    """Token-by-token recurrent oracle for ssd_chunked."""
+    bsz, s, h, p = x.shape
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp                            # [B,H,P],[B,H],[B,N],[B,N]
+        decay = jnp.exp(dtt * a_neg)                     # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        hnew = hprev * decay[:, :, None, None] + upd
+        yt = jnp.einsum("bn,bhpn->bhp", ct, hnew)
+        return hnew, yt
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b_in, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c_in, 1, 0).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def _split_proj(zxbcdt, cfg):
+    d_inner, h, p, n, conv_dim = ssm_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_cache, w, bias, token_mask=None):
+    """xbc [B,S,C]; conv_cache [B,W-1,C] (carry-in). Returns (out, new_cache).
+
+    ``token_mask`` [B,S]: when the chunk carries trailing batch padding, the
+    new conv cache must hold the last W-1 *valid* inputs, not the pads —
+    gathered per-row at the valid count."""
+    width = w.shape[0]
+    full = jnp.concatenate([conv_cache.astype(xbc.dtype), xbc], axis=1)
+    # depthwise conv, valid over the padded buffer
+    out = sum(full[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+              for i in range(width))
+    out = jax.nn.silu(out + bias.astype(xbc.dtype))
+    if token_mask is None:
+        new_cache = full[:, -(width - 1):, :]
+    else:
+        n_valid = jnp.sum(token_mask.astype(jnp.int32), axis=1)       # [B]
+        idx = n_valid[:, None] + jnp.arange(width - 1)[None, :]       # [B,W-1]
+        new_cache = jnp.take_along_axis(full, idx[:, :, None], axis=1)
+    return out, new_cache.astype(conv_cache.dtype)
+
+
+def ssm_block(params, cfg, x, cache, *, decode: bool = False,
+              token_mask=None):
+    """x [B,S,d]; cache {'h','conv'} -> (out [B,S,d], new_cache).
+
+    ``token_mask`` [B,S] bool: False tokens (batch padding) must not touch
+    the recurrent state — their dt is zeroed (decay=1, update=0). Unlike
+    attention, SSM state has no positional masking, so this is load-bearing
+    for padded serving batches."""
+    d_inner, h, p, n, conv_dim = ssm_dims(cfg)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, new_conv = _causal_conv(xbc, cache["conv"], params["conv_w"],
+                                 params["conv_b"], token_mask=token_mask)
+    x_ssm = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner:d_inner + n]
+    c_in = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])            # [B,S,H]
+    if token_mask is not None:
+        dt = jnp.where(token_mask[..., None], dt, 0.0)
+    a_neg = -jnp.exp(params["A_log"])                    # [H]
+
+    bsz, s, _ = x.shape
+    xh = x_ssm.reshape(bsz, s, h, p)
+    if decode and s == 1:
+        y, h_final = _ssd_decode_step(xh, dt, a_neg, b_in, c_in, cache["h"])
+    else:
+        y, h_final = ssd_chunked(xh, dt, a_neg, b_in, c_in, cache["h"], cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, {"h": h_final, "conv": new_conv}
+
+
+def _ssd_decode_step(x, dt, a_neg, b_in, c_in, h0):
+    """Single-token recurrent update. x [B,1,H,P]."""
+    xt = x[:, 0].astype(jnp.float32)
+    dtt = dt[:, 0]
+    bt = b_in[:, 0].astype(jnp.float32)
+    ct = c_in[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dtt * a_neg)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+    hnew = h0.astype(jnp.float32) * decay[:, :, None, None] + upd
+    yt = jnp.einsum("bn,bhpn->bhp", ct, hnew)
+    return yt[:, None].astype(x.dtype), hnew

@@ -1,0 +1,101 @@
+"""Paper-scale serving experiments: 5 approaches x (hardware, model) grid.
+
+The same scheduler/balancer/engine code as the functional path, driven by
+``NullExecutor`` (no tensor compute) and the roofline device-time models —
+i.e., a discrete-event simulation whose *control flow* is the production
+code. Reproduces the shape of Table 2 (max throughput), Fig. 4 (TTFT/TBT
+P99) and Table 3 (disaggregated load imbalance).
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List, Optional
+
+from repro.core.balancer import Balancer
+from repro.core.baselines import build_dp, build_pp
+from repro.core.cronus import build_cronus, build_disaggregated
+from repro.core.executor import NullExecutor
+from repro.core.predictor import profile_chunked, profile_prefill
+from repro.core.request import Request
+from repro.serving.hardware import DeviceModel, DeviceSpec
+
+APPROACHES = ("cronus", "dp", "pp", "disagg_hl", "disagg_lh")
+
+
+def _null_factory(role: str):
+    return NullExecutor()
+
+
+def build_system(approach: str, cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec,
+                 *, max_slots: int = 256, block_size: int = 16,
+                 max_batched_tokens: int = 512, executor_factory=None):
+    executor_factory = executor_factory or _null_factory
+    hi = DeviceModel(hi_spec, cfg)
+    lo = DeviceModel(lo_spec, cfg)
+    kw = dict(executor_factory=executor_factory, max_slots=max_slots,
+              block_size=block_size)
+    if approach == "cronus":
+        bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+        return build_cronus(cfg, lo, hi, balancer=bal,
+                            max_batched_tokens=max_batched_tokens, **kw)
+    if approach == "disagg_lh":   # prefill on low-end, decode on high-end
+        return build_disaggregated(cfg, lo, hi,
+                                   max_batched_tokens=max_batched_tokens, **kw)
+    if approach == "disagg_hl":   # prefill on high-end, decode on low-end
+        return build_disaggregated(cfg, hi, lo,
+                                   max_batched_tokens=max_batched_tokens, **kw)
+    if approach == "dp":
+        return build_dp(cfg, hi, lo, **kw)
+    if approach == "pp":
+        return build_pp(cfg, hi_spec, lo_spec, **kw)
+    raise KeyError(approach)
+
+
+def run_approach(approach: str, cfg, hi_spec, lo_spec,
+                 requests: List[Request], **kw) -> Dict[str, float]:
+    system = build_system(approach, cfg, hi_spec, lo_spec, **kw)
+    return system.run([copy.deepcopy(r) for r in requests])
+
+
+def compare_all(cfg, hi_spec, lo_spec, requests,
+                approaches=APPROACHES, **kw) -> Dict[str, Dict[str, float]]:
+    return {a: run_approach(a, cfg, hi_spec, lo_spec, requests, **kw)
+            for a in approaches}
+
+
+# ---------------------------------------------------------------------------
+# Table 3: relative utilization of the disaggregated configurations
+# ---------------------------------------------------------------------------
+
+def max_prefill_throughput(device: DeviceModel, requests) -> float:
+    """Requests/s if the instance did nothing but full prefills."""
+    total = sum(device.prefill_time(r.input_len) for r in requests)
+    return len(requests) / total
+
+
+def max_decode_throughput(device: DeviceModel, requests, *,
+                          max_slots: int = 256, block_size: int = 16) -> float:
+    """Requests/s if the instance did nothing but decode (prompts appear
+    pre-filled): bounded by memory (batch) and decode iteration time."""
+    budget_tokens = device.kv_block_budget(block_size) * block_size
+    avg_ctx = sum(r.input_len + r.output_len / 2 for r in requests) / len(requests)
+    avg_out = sum(r.output_len for r in requests) / len(requests)
+    batch = max(min(max_slots, int(budget_tokens / max(avg_ctx, 1))), 1)
+    t_iter = device.decode_iter_time(batch * avg_ctx, batch)
+    # one iteration decodes `batch` tokens; a request needs avg_out tokens
+    return batch / (avg_out * t_iter)
+
+
+def utilization_table(cfg, hi_spec, lo_spec, requests) -> Dict[str, Dict[str, float]]:
+    """Paper Table 3: system throughput / standalone instance throughput."""
+    hi, lo = DeviceModel(hi_spec, cfg), DeviceModel(lo_spec, cfg)
+    out = {}
+    for name, pre_dev, dec_dev in (("disagg_hl", hi, lo), ("disagg_lh", lo, hi)):
+        res = run_approach(name, cfg, hi_spec, lo_spec, requests)
+        tput = res["throughput"]
+        out[name] = {
+            "prefill_util": tput / max_prefill_throughput(pre_dev, requests),
+            "decode_util": tput / max_decode_throughput(dec_dev, requests),
+            "throughput": tput,
+        }
+    return out

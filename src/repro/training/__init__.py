@@ -1,0 +1,6 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
+from repro.training.trainer import Trainer, make_train_step
+
+__all__ = ["AdamWConfig", "Trainer", "adamw_update", "init_adamw",
+           "load_checkpoint", "make_train_step", "save_checkpoint"]

@@ -1,0 +1,46 @@
+"""Sharded-friendly npz checkpointing (no orbax/tensorstore in this env).
+
+Leaves are flattened with '/'-joined path keys. For multi-host use each host
+would write its addressable shards; here (single host) we write full arrays.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blob = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        blob.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    blob["meta/step"] = np.asarray(step)
+    np.savez(path, **blob)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    """Restores into the structure of the provided templates."""
+    with np.load(path) as z:
+        def restore(template, prefix):
+            flat = _flatten(template)
+            restored = {k: z[f"{prefix}/{k}"] for k in flat}
+            leaves_order = list(flat.keys())
+            treedef = jax.tree_util.tree_structure(template)
+            return treedef.unflatten([restored[k] for k in leaves_order])
+
+        params = restore(params_template, "params")
+        opt = restore(opt_template, "opt") if opt_template is not None else None
+        step = int(z["meta/step"])
+    return params, opt, step

@@ -1,0 +1,56 @@
+"""Training loop: jit'd train_step (loss + AdamW), optional pjit sharding."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.data import TokenDataset, make_train_batch
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+def make_train_step(model, opt_cfg: AdamWConfig) -> Callable:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, stats = adamw_update(opt_cfg, params, grads, opt_state)
+        stats["loss"] = loss
+        return params, opt_state, stats
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: object
+    opt_cfg: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    batch_size: int = 8
+    seq_len: int = 64
+
+    def __post_init__(self):
+        self.dataset = TokenDataset(self.model.cfg.vocab_size)
+        self._step_fn = jax.jit(make_train_step(self.model, self.opt_cfg))
+
+    def init(self, seed: int = 0):
+        params = self.model.init_params(jax.random.PRNGKey(seed))
+        return params, init_adamw(params)
+
+    def run(self, params, opt_state, n_steps: int, log_every: int = 10,
+            log: Optional[Callable] = print):
+        losses = []
+        t0 = time.time()
+        for step in range(n_steps):
+            batch = {k: jnp.asarray(v) for k, v in make_train_batch(
+                self.model.cfg, self.batch_size, self.seq_len, step,
+                self.dataset).items()}
+            params, opt_state, stats = self._step_fn(params, opt_state, batch)
+            losses.append(float(stats["loss"]))
+            if log and step % log_every == 0:
+                log(f"step {step:5d} loss {losses[-1]:.4f} "
+                    f"lr {float(stats['lr']):.2e} "
+                    f"gnorm {float(stats['grad_norm']):.3f} "
+                    f"({(time.time()-t0)/(step+1)*1000:.0f} ms/step)")
+        return params, opt_state, losses

@@ -1,0 +1,33 @@
+"""Subprocess check: shard_map expert-parallel MoE dispatch (§Perf HC1-2)
+matches the dense all-experts oracle on a real 2x2 device mesh."""
+import os, sys
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models.moe import init_moe, moe_block, moe_block_dense_ref
+from repro.models import sharding as shmod
+
+cfg = get_config("kimi-k2-1t-a32b", smoke=True)  # E=4, top2
+import dataclasses
+cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # avoid drops for comparison
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+rules = {"batch": ("data",), "experts": "model", "model": "model"}
+p = init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model), jnp.float32)
+
+want = moe_block_dense_ref(p, cfg, x)
+
+shmod.set_rules(rules, mesh)
+try:
+    with mesh:
+        fn = jax.jit(lambda p, x: moe_block(p, cfg, x, exact=False))
+        got, aux = fn(p, x)
+finally:
+    shmod.set_rules(None)
+err = float(jnp.max(jnp.abs(got - want)))
+print("shard_map moe max err vs dense ref:", err)
+assert err < 1e-3, err
+print("OK")

@@ -1,0 +1,44 @@
+"""Property tests: paged-KV block allocator invariants under random
+alloc/extend/free sequences (no double allocation, no leaks, N_free exact)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kvcache import BlockAllocator
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+                          st.integers(0, 9), st.integers(1, 400)),
+                min_size=1, max_size=60))
+def test_allocator_invariants(ops):
+    a = BlockAllocator(num_blocks=128, block_size=16)
+    live = {}
+    for op, rid_i, tokens in ops:
+        rid = f"r{rid_i}"
+        if op == "alloc" and rid not in live:
+            if a.can_allocate(tokens):
+                blocks = a.allocate(rid, tokens)
+                assert len(blocks) == a.blocks_needed(tokens)
+                live[rid] = tokens
+        elif op == "extend" and rid in live:
+            new_total = live[rid] + tokens
+            need = a.blocks_needed(new_total) - a.blocks_needed(live[rid])
+            if need <= a.num_free:
+                a.extend(rid, live[rid], new_total)
+                live[rid] = new_total
+        elif op == "free" and rid in live:
+            a.free(rid)
+            del live[rid]
+        a.check_invariants()
+    used = sum(a.blocks_needed(t) for t in live.values())
+    assert a.num_free == a.num_blocks - used
+
+
+def test_allocator_oom():
+    a = BlockAllocator(num_blocks=4, block_size=16)
+    a.allocate("r1", 64)
+    assert a.num_free == 0
+    with pytest.raises(MemoryError):
+        a.allocate("r2", 1)
+    a.free("r1")
+    assert a.num_free == 4

@@ -1,0 +1,72 @@
+"""Balancer (Algorithm 1) unit + property tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.balancer import Balancer, CPIStats
+from repro.core.predictor import profile_chunked, profile_prefill
+from repro.serving.hardware import A100, A30, DeviceModel
+
+CFG = get_config("llama3-8b")
+LO = DeviceModel(A30, CFG)
+HI = DeviceModel(A100, CFG)
+
+
+def _balancer():
+    return Balancer(profile_prefill(LO), profile_chunked(HI))
+
+
+def _stats(n_decode=32, dctx=40_000, free=100_000):
+    return CPIStats(n_decode=n_decode, decode_ctx_sum=dctx,
+                    free_kv_blocks=free, block_size=16,
+                    max_batched_tokens=512)
+
+
+def test_fallback_when_cpi_full():
+    """Alg 1 line 1: too few free KV blocks -> whole prompt on the PPI."""
+    b = _balancer()
+    assert b.partial_prefill_length(1600, _stats(free=10)) == 1600
+
+
+def test_split_is_interior_and_balanced():
+    b = _balancer()
+    l_in = 4096
+    lp = b.partial_prefill_length(l_in, _stats())
+    assert 1 <= lp <= l_in
+    # the chosen split's |T_prefill - T_chunked| is the minimum over a
+    # dense grid (argmin property)
+    stats = _stats()
+
+    def gap(lp_c):
+        t_p = b.prefill_pred.predict(lp_c)
+        n_p = stats.max_batched_tokens - stats.n_decode
+        l_c = l_in - lp_c
+        n_iter = np.ceil(l_c / n_p)
+        l_last = lp_c + np.floor(l_c / n_p) * n_p
+        t_c = n_iter * b.chunked_pred.predict((l_in + l_last) / 2,
+                                              stats.decode_ctx_sum)
+        return abs(t_p - t_c)
+
+    grid = np.ceil(np.arange(1, 513) / 512 * l_in)
+    best = min(gap(g) for g in grid)
+    assert gap(lp) <= best * 1.0001
+
+
+@settings(max_examples=40, deadline=None)
+@given(l_in=st.integers(2, 16384), n_decode=st.integers(0, 400),
+       dctx=st.integers(0, 400_000))
+def test_split_always_valid(l_in, n_decode, dctx):
+    b = _balancer()
+    lp = b.partial_prefill_length(l_in, _stats(n_decode=min(n_decode, 500),
+                                               dctx=dctx))
+    assert 1 <= lp <= l_in
+
+
+def test_more_decode_load_shifts_split_to_ppi():
+    """With a busier CPI (more decode context), chunked iterations are
+    slower, so the balancer should give the PPI at least as much work."""
+    b = _balancer()
+    lp_idle = b.partial_prefill_length(8192, _stats(n_decode=0, dctx=0))
+    lp_busy = b.partial_prefill_length(8192, _stats(n_decode=450,
+                                                    dctx=600_000))
+    assert lp_busy >= lp_idle

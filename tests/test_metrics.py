@@ -1,0 +1,38 @@
+"""Metrics aggregation: TTFT/TBT/throughput definitions (paper §2)."""
+import math
+
+from repro.core.metrics import RequestMetrics, aggregate, percentile
+
+
+def _req(rid, arrival, first, token_times, finish):
+    m = RequestMetrics(rid, arrival, 10, len(token_times) + 1)
+    m.first_token_time = first
+    m.token_times = token_times
+    m.finish_time = finish
+    return m
+
+
+def test_ttft_tbt():
+    m = _req("a", 1.0, 1.5, [1.6, 1.8, 2.1], 2.1)
+    assert math.isclose(m.ttft, 0.5)
+    assert [round(x, 6) for x in m.tbts] == [0.1, 0.2, 0.3]
+
+
+def test_aggregate():
+    reqs = [_req("a", 0.0, 0.5, [0.6], 0.6),
+            _req("b", 0.0, 1.0, [1.2], 1.2)]
+    agg = aggregate(reqs)
+    assert agg["completed"] == 2
+    assert math.isclose(agg["throughput"], 2 / 1.2)
+    assert agg["ttft_p99"] <= 1.0 and agg["ttft_p99"] >= 0.5
+    assert math.isclose(agg["tbt_p50"], 0.15)
+
+
+def test_percentile_edge_cases():
+    assert math.isnan(percentile([], 99))
+    assert percentile([3.0], 99) == 3.0
+
+
+def test_aggregate_empty():
+    agg = aggregate([])
+    assert agg["completed"] == 0 and agg["throughput"] == 0.0

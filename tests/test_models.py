@@ -1,0 +1,82 @@
+"""Per-architecture smoke tests: reduced variant of each assigned family
+runs one forward, one decode step, and one train step on CPU; output shapes
+and finiteness asserted. (Full configs are exercised only via the dry-run.)
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    m = build_model(cfg, exact_moe=True)
+    params = m.init_params(KEY)
+    b, s = 2, 16
+    cache = m.init_cache(b, 64)
+
+    if cfg.enc_dec:
+        enc_emb = jax.random.normal(KEY, (b, 32, cfg.d_model))
+        enc_out = m.encode(params, enc_emb)
+        toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+        logits, cache2, _ = m.forward(params, toks, cache,
+                                      jnp.zeros((b,), jnp.int32),
+                                      enc_out=enc_out)
+    else:
+        if cfg.embeddings_input:
+            inp = jax.random.normal(KEY, (b, s, cfg.d_model))
+        else:
+            inp = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+        logits, cache2, _ = m.forward(params, inp, cache,
+                                      jnp.zeros((b,), jnp.int32))
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    # one decode step
+    tok = jnp.argmax(logits[:, -1:], -1)
+    cl = jnp.full((b,), s, jnp.int32)
+    if cfg.embeddings_input and not cfg.enc_dec:
+        dec_in = params["embed"][tok]
+    else:
+        dec_in = tok
+    logits2, _, _ = m.forward(params, dec_in, cache2, cl, decode=True)
+    assert logits2.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())
+
+    # one train step (loss is finite)
+    if cfg.enc_dec:
+        batch = {"enc_emb": jax.random.normal(KEY, (b, 32, cfg.d_model)),
+                 "tokens": jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab_size)}
+    else:
+        batch = {"tokens": jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab_size)}
+    loss = m.loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_param_counts_match_citations():
+    # sanity: derived parameter counts are near the models' nameplates
+    approx = {
+        "kimi-k2-1t-a32b": (1.0e12, 0.1),
+        "deepseek-v2-236b": (236e9, 0.05),
+        "llama3-8b": (8e9, 0.05),
+        "qwen2-7b": (7.6e9, 0.05),
+        "mamba2-780m": (780e6, 0.05),
+        "qwen2-vl-72b": (72e9, 0.05),
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < max(tol, 0.1), (arch, n, target)
+
+
+def test_moe_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    active = cfg.active_param_count()
+    assert 25e9 < active < 40e9  # "a32b"

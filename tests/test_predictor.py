@@ -1,0 +1,47 @@
+"""Eq. 2 / Eq. 3 predictors: linear fits on roofline-profiled data reach the
+paper's fit quality (paper: R2=0.993 / MAPE 7.4% for prefill on A30;
+R2=0.990 / MAPE 0.8% for chunked iterations on A100 — Fig. 3)."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.predictor import (ChunkedIterPredictor, PrefillPredictor,
+                                  profile_chunked, profile_prefill)
+from repro.serving.hardware import A100, A30, DeviceModel
+
+CFG = get_config("llama3-8b")
+
+
+def test_prefill_fit_quality():
+    pred = profile_prefill(DeviceModel(A30, CFG))
+    assert pred.r2 > 0.95, pred.r2   # paper: 0.993, MAPE 7.4% (A30)
+    assert pred.mape < 0.15, pred.mape
+    # slope positive; intercept may be slightly negative (the roofline
+    # max(compute, memory) kink) — bounded near zero
+    assert pred.k_p > 0 and pred.b_p > -0.05
+
+
+def test_chunked_fit_quality():
+    pred = profile_chunked(DeviceModel(A100, CFG))
+    assert pred.r2 > 0.95, pred.r2   # paper: 0.990, MAPE 0.8% (A100, Fig 3)
+    assert pred.mape < 0.05, pred.mape
+    # prefill-context slope positive; the decode-context slope may be ~0 on
+    # a compute-bound device (decodes displace prefill tokens in the budget)
+    assert pred.k_ctxp > 0 and pred.k_ctxd > -1e-7
+
+
+def test_fit_recovers_exact_linear():
+    xs = np.linspace(10, 1000, 50)
+    pred = PrefillPredictor().fit(xs, 0.003 * xs + 0.2)
+    assert abs(pred.k_p - 0.003) < 1e-9 and abs(pred.b_p - 0.2) < 1e-9
+    assert pred.r2 > 0.999999
+
+    x1 = np.tile(np.linspace(0, 5000, 20), 10)
+    x2 = np.repeat(np.linspace(0, 9000, 10), 20)
+    pred2 = ChunkedIterPredictor().fit(x1, x2, 1e-5 * x1 + 2e-6 * x2 + 0.01)
+    assert abs(pred2.k_ctxp - 1e-5) < 1e-12
+    assert abs(pred2.k_ctxd - 2e-6) < 1e-12
+
+
+def test_predict_monotone():
+    pred = profile_prefill(DeviceModel(A30, CFG))
+    assert pred.predict(2000) > pred.predict(1000)

@@ -1,0 +1,75 @@
+"""Sharding rules: name-based param specs, divisibility fallback, and a
+(subprocess) production-mesh dry-run smoke covering one arch per family.
+
+The in-process tests use a 1-device mesh (this container); the full 512-
+device sweep is results/dryrun (EXPERIMENTS.md §Dry-run).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.sharding import divisible_spec, param_pspec
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+RULES = {"model": "model", "batch": ("data",), "vocab": "model"}
+
+
+def _pspec_for(tree_path_leaf):
+    pass
+
+
+def test_divisible_spec_drops_uneven():
+    spec = divisible_spec(P("model", None), (50_280, 1536), FakeMesh())
+    assert spec == P(None, None)
+    spec2 = divisible_spec(P("model", None), (51_200, 1536), FakeMesh())
+    assert spec2 == P("model", None)
+
+
+def test_param_specs_by_name():
+    cfg = get_config("kimi-k2-1t-a32b", smoke=True)
+    m = build_model(cfg)
+    params = jax.eval_shape(lambda: m.init_params(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        specs[key] = (param_pspec(path, leaf, RULES), leaf.shape)
+    # routed expert weights: expert dim sharded (expert parallelism)
+    moe_gate = [v for k, v in specs.items()
+                if "moe" in k and k.endswith("w_gate") and "shared" not in k]
+    assert moe_gate and all(s[0] == P(None, "model", None, None)
+                            for s in moe_gate), moe_gate
+    # shared expert / dense mlp: ffn dim sharded
+    shared = [v for k, v in specs.items()
+              if "shared_0" in k and k.endswith("w_gate")]
+    assert shared and all(s[0] == P(None, None, "model") for s in shared)
+    # attention projections
+    wq = [v for k, v in specs.items() if k.endswith("attn/wq")]
+    assert wq and all(s[0] == P(None, None, "model") for s in wq)
+
+
+@pytest.mark.skipif(not os.environ.get("RUN_DRYRUN_TESTS"),
+                    reason="slow 512-device subprocess dry-run; "
+                           "set RUN_DRYRUN_TESTS=1 (covered by results/dryrun)")
+@pytest.mark.parametrize("arch,shape", [
+    ("llama3-8b", "decode_32k"),
+    ("mamba2-780m", "long_500k"),
+    ("kimi-k2-1t-a32b", "prefill_32k"),
+])
+def test_dryrun_subprocess(arch, shape):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stderr[-2000:]

@@ -1,0 +1,69 @@
+"""Paper-claims trend tests on the discrete-event path (NullExecutor).
+
+Thresholds are deliberately loose — they assert the ORDERING the paper
+establishes (Table 2, Table 3, Fig. 4), not its exact numbers.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.serving.hardware import A10, A100
+from repro.serving.simulator import compare_all, utilization_table
+from repro.serving.trace import make_trace
+
+CFG = get_config("llama3-8b")
+
+
+@pytest.fixture(scope="module")
+def tput_results():
+    reqs = make_trace(400, seed=0, interval=0.0)   # max-throughput mode
+    return compare_all(CFG, A100, A10, reqs)
+
+
+def test_throughput_ordering(tput_results):
+    r = tput_results
+    t = {k: v["throughput"] for k, v in r.items()}
+    # Table 2: Cronus ~ DP, both well above PP and both disagg variants
+    assert t["cronus"] > 0.85 * t["dp"]
+    assert t["cronus"] > 1.3 * t["pp"]
+    assert t["cronus"] > 1.5 * t["disagg_hl"]
+    assert t["cronus"] > 1.3 * t["disagg_lh"]
+
+
+def test_tbt_ordering(tput_results):
+    r = tput_results
+    # Fig 4 row 2: disagg L-H best TBT (dedicated decode GPU);
+    # Cronus <= DP and PP (all decode on the high-end device)
+    assert r["disagg_lh"]["tbt_p99"] < r["cronus"]["tbt_p99"]
+    assert r["cronus"]["tbt_p99"] < r["pp"]["tbt_p99"]
+    assert r["cronus"]["tbt_p99"] <= r["dp"]["tbt_p99"] * 1.05
+
+
+def test_ttft_near_saturation():
+    # 600 requests @ 7 req/s: the regime where DP's low-end queueing tips
+    # (validated: cronus 1.36 s vs dp 2.03 s vs pp saturated). Shorter
+    # traces don't reach DP's tipping point and the margin inverts.
+    reqs = make_trace(600, seed=1, interval=1 / 7.0)
+    r = compare_all(CFG, A100, A10, reqs,
+                    approaches=("cronus", "dp", "pp"))
+    # Fig 4 row 1: Cronus TTFT P99 below DP and far below PP near
+    # saturation (paper reports up to 55% below DP)
+    assert r["cronus"]["ttft_p99"] < r["dp"]["ttft_p99"]
+    assert r["cronus"]["ttft_p99"] < r["pp"]["ttft_p99"]
+
+
+def test_disagg_load_imbalance():
+    """Table 3: the dedicated instance on the low-end side saturates
+    (~100%) while the high-end side idles (<= ~60%)."""
+    reqs = make_trace(250, seed=0, interval=0.0)
+    table = utilization_table(CFG, A100, A10, reqs)
+    # H-L: prefill on high-end (underutilized), decode on low-end (bound)
+    assert table["disagg_hl"]["decode_util"] > 0.6
+    assert table["disagg_hl"]["prefill_util"] < 0.6
+    # L-H: prefill on low-end (bound), decode on high-end (underutilized)
+    assert table["disagg_lh"]["prefill_util"] > 0.6
+    assert table["disagg_lh"]["decode_util"] < 0.6
+
+
+def test_all_requests_complete(tput_results):
+    for name, m in tput_results.items():
+        assert m["completed"] == 400, name

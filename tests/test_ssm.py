@@ -1,0 +1,60 @@
+"""SSD (mamba2) numerics: chunked scan vs token-recurrent oracle; state
+carry across chunk boundaries (the Cronus partial-prefill contract for
+attention-free architectures)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import ssd_chunked, ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(b, s, h, p, n, key=KEY):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    a_neg = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b_in = jax.random.normal(ks[3], (b, s, n))
+    c_in = jax.random.normal(ks[4], (b, s, n))
+    h0 = jax.random.normal(jax.random.fold_in(key, 9), (b, h, p, n)) * 0.1
+    return x, dt, a_neg, b_in, c_in, h0
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(1, 40), chunk=st.sampled_from([4, 8, 16]))
+def test_ssd_chunked_matches_recurrent(s, chunk):
+    x, dt, a_neg, b_in, c_in, h0 = _inputs(2, s, 3, 4, 5)
+    y_ref, h_ref = ssd_ref(x, dt, a_neg, b_in, c_in, h0)
+    y, h = ssd_chunked(x, dt, a_neg, b_in, c_in, h0, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(split=st.integers(1, 31))
+def test_ssd_state_carry(split):
+    """scan(x) == scan(x[:split]) then scan(x[split:], h_mid) — exactly the
+    PPI -> CPI state handoff."""
+    x, dt, a_neg, b_in, c_in, h0 = _inputs(1, 32, 2, 4, 3)
+    y_full, h_full = ssd_chunked(x, dt, a_neg, b_in, c_in, h0, 8)
+    y1, h_mid = ssd_chunked(x[:, :split], dt[:, :split], a_neg,
+                            b_in[:, :split], c_in[:, :split], h0, 8)
+    y2, h_end = ssd_chunked(x[:, split:], dt[:, split:], a_neg,
+                            b_in[:, split:], c_in[:, split:], h_mid, 8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_end), np.asarray(h_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_padding_neutral():
+    """Lengths not divisible by the chunk: padding must not change h."""
+    x, dt, a_neg, b_in, c_in, h0 = _inputs(1, 13, 2, 4, 3)
+    _, h_a = ssd_chunked(x, dt, a_neg, b_in, c_in, h0, 8)
+    _, h_b = ssd_ref(x, dt, a_neg, b_in, c_in, h0)
+    np.testing.assert_allclose(np.asarray(h_a), np.asarray(h_b),
+                               atol=1e-4, rtol=1e-4)

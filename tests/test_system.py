@@ -1,0 +1,202 @@
+"""End-to-end behaviour: Cronus / disaggregated / DP with REAL JAX
+execution produce token streams identical to a monolithic single-request
+oracle; the Balancer picks non-trivial splits; metrics are recorded."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.balancer import Balancer
+from repro.core.baselines import build_dp
+from repro.core.cronus import build_cronus, build_disaggregated
+from repro.core.executor import RealExecutor
+from repro.core.predictor import profile_chunked, profile_prefill
+from repro.core.request import Request
+from repro.models import build_model
+from repro.serving.hardware import A100, A30, DeviceModel
+
+S_KV, SLOTS, CHUNK = 128, 4, 16
+LENS = [(17, 5), (33, 8), (9, 4), (41, 6), (25, 3)]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3-8b", smoke=True)
+    model = build_model(cfg, exact_moe=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n, _ in LENS]
+
+    def oracle(prompt, out_len):
+        # identical tensor shapes to the engines (same slot count, same
+        # fixed chunk width) => bit-identical XLA reductions => the token
+        # equality below is exact, not a fp coincidence
+        ex = RealExecutor(model, params, max_slots=SLOTS, s_kv=S_KV,
+                          chunk_pad=CHUNK)
+        first, L = None, len(prompt)
+        for lo in range(0, L, CHUNK):
+            hi_ = min(lo + CHUNK, L)
+            first = ex.prefill_chunk(0, prompt[lo:hi_], lo, hi_ == L)
+        toks = [first]
+        for t in range(out_len - 1):
+            toks.append(ex.decode({0: toks[-1]}, {0: L + t})[0])
+        return toks
+
+    want = {f"r{i}": oracle(prompts[i], LENS[i][1]) for i in range(len(LENS))}
+    hi, lo = DeviceModel(A100, cfg), DeviceModel(A30, cfg)
+    return cfg, model, params, prompts, want, hi, lo
+
+
+def _reqs(prompts):
+    return [Request(req_id=f"r{i}", prompt=prompts[i].copy(),
+                    output_len=LENS[i][1], arrival=0.0)
+            for i in range(len(LENS))]
+
+
+def _factory(model, params):
+    def f(role):
+        return RealExecutor(model, params, max_slots=SLOTS, s_kv=S_KV,
+                            chunk_pad=CHUNK)
+    return f
+
+
+def test_cronus_matches_oracle(setup):
+    """Structural run: everything completes, balancer splits non-trivially,
+    metrics recorded. (Exact token equality vs the oracle is asserted by
+    test_token_equivalence_subprocess in a fresh process — see
+    helpers/check_token_equivalence.py for why.)"""
+    cfg, model, params, prompts, want, hi, lo = setup
+    bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+    sys_c = build_cronus(cfg, lo, hi, executor_factory=_factory(model, params),
+                         balancer=bal, max_batched_tokens=16,
+                         max_slots=SLOTS, block_size=4)
+    res = sys_c.run(_reqs(prompts))
+    assert res["completed"] == len(LENS)
+    for r in sys_c.cpi.finished:
+        assert len(r.generated) == r.output_len
+        assert 1 <= r.partial_len <= r.input_len
+        assert r.metrics.first_token_time is not None
+        assert len(r.metrics.tbts) == r.output_len - 1
+    assert res["throughput"] > 0 and res["ttft_p99"] > 0
+
+
+def test_disagg_lh_matches_oracle(setup):
+    cfg, model, params, prompts, want, hi, lo = setup
+    sys_d = build_disaggregated(cfg, lo, hi,
+                                executor_factory=_factory(model, params),
+                                max_batched_tokens=16, max_slots=SLOTS,
+                                block_size=4)
+    res = sys_d.run(_reqs(prompts))
+    assert res["completed"] == len(LENS)
+    for r in sys_d.cpi.finished:
+        assert len(r.generated) == r.output_len
+        assert r.partial_len == r.input_len  # full prefill on the PPI
+
+
+def test_dp_matches_oracle(setup):
+    cfg, model, params, prompts, want, hi, lo = setup
+
+    def f(role):
+        return RealExecutor(model, params, max_slots=SLOTS, s_kv=S_KV,
+                            chunk_pad=CHUNK)
+
+    sys_dp = build_dp(cfg, hi, lo, executor_factory=f, max_slots=SLOTS,
+                      block_size=4)
+    res = sys_dp.run(_reqs(prompts))
+    assert res["completed"] == len(LENS)
+    fin = {r.req_id: r for e in sys_dp.engines for r in e.finished}
+    assert len(fin) == len(LENS)
+    for rid, r in fin.items():
+        assert len(r.generated) == r.output_len
+
+
+def test_token_equivalence_subprocess():
+    """THE correctness crown jewel: Cronus / Disagg / DP token streams ==
+    monolithic oracle, bit-for-bit, in a clean process (see helper)."""
+    import subprocess
+    import sys as _sys
+    script = __file__.replace("test_system.py",
+                              "helpers/check_token_equivalence.py")
+    proc = subprocess.run([_sys.executable, script], capture_output=True,
+                          text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cronus_staggered_arrivals(setup):
+    """Arrival times respected: TTFT measured from each arrival; every
+    request completes with the right output length. (Exact token equality
+    under arbitrary balancer splits is asserted by the canonical test above;
+    here chunk boundaries shift with arrival-dependent CPI stats, which is
+    compile-cache-sensitive on CPU — see conftest.)"""
+    cfg, model, params, prompts, want, hi, lo = setup
+    bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+    sys_c = build_cronus(cfg, lo, hi, executor_factory=_factory(model, params),
+                         balancer=bal, max_batched_tokens=16,
+                         max_slots=SLOTS, block_size=4)
+    reqs = _reqs(prompts)
+    for i, r in enumerate(reqs):
+        r.arrival = i * 0.5
+        r.metrics.arrival = r.arrival
+    res = sys_c.run(reqs)
+    assert res["completed"] == len(LENS)
+    for r in sys_c.cpi.finished:
+        assert len(r.generated) == r.output_len
+        assert r.metrics.first_token_time >= r.metrics.arrival
+        assert r.metrics.finish_time >= r.metrics.first_token_time
+        # monotone non-decreasing token timestamps
+        ts = [r.metrics.first_token_time] + r.metrics.token_times
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+
+def test_cronus_moe_and_ssm_archs(setup):
+    """Cronus end-to-end with an MoE arch and an attention-free SSM arch —
+    the families where the KV 'transfer' differs most (expert layers;
+    constant-size recurrent state). Structural checks in-process; exact
+    token equivalence is asserted by the subprocess helper (MoE dispatch is
+    batch-composition-sensitive, and long-lived pytest processes perturb
+    XLA CPU numerics — see helpers/check_token_equivalence.py)."""
+    del setup
+    for arch in ("kimi-k2-1t-a32b", "mamba2-780m"):
+        n_reqs = 1 if arch.startswith("kimi") else 2
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg, exact_moe=True)
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (19, 27)][:n_reqs]
+        hi, lo = DeviceModel(A100, cfg), DeviceModel(A30, cfg)
+        bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+        sys_c = build_cronus(cfg, lo, hi,
+                             executor_factory=_factory(model, params),
+                             balancer=bal, max_batched_tokens=16,
+                             max_slots=SLOTS, block_size=4)
+        reqs = [Request(req_id=f"r{i}", prompt=prompts[i].copy(),
+                        output_len=4) for i in range(n_reqs)]
+        res = sys_c.run(reqs)
+        assert res["completed"] == n_reqs, arch
+        for r in sys_c.cpi.finished:
+            assert len(r.generated) == 4
+            assert 1 <= r.partial_len <= r.input_len
+
+
+def test_decode_offload_functional(setup):
+    """Paper §6 future-work feature: bounded decode offload to the PPI —
+    offloaded requests complete (on the PPI) with correct output lengths,
+    and nothing is lost or duplicated."""
+    cfg, model, params, prompts, want, hi, lo = setup
+    bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+    sys_c = build_cronus(cfg, lo, hi, executor_factory=_factory(model, params),
+                         balancer=bal, max_batched_tokens=16,
+                         max_slots=SLOTS, block_size=4, decode_offload=True)
+    # tiny CPI block pool -> Alg. 1 fallback fires -> offload path exercised
+    sys_c.cpi.allocator = type(sys_c.cpi.allocator)(num_blocks=14,
+                                                    block_size=4)
+    sys_c.cpi.ecfg.num_kv_blocks = 14
+    res = sys_c.run(_reqs(prompts))
+    assert res["completed"] == len(LENS)
+    done = {r.req_id for r in sys_c.cpi.finished} | {
+        r.req_id for r in sys_c.ppi.finished}
+    assert len(done) == len(LENS)
+    for r in list(sys_c.cpi.finished) + list(sys_c.ppi.finished):
+        assert len(r.generated) == r.output_len
