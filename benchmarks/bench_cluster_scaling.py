@@ -1,0 +1,77 @@
+"""Cluster scaling: throughput + TTFT/TBT P99 vs cluster size and router
+policy (the multi-instance dimension the paper's single-pair evaluation
+leaves open — HexGen-2-style heterogeneous sets, vLLM-production-stack-style
+routing).
+
+Clusters scale 2 -> 6 engines by adding Cronus pairs (the 6-engine row
+mixes A100+A10 and A100+A30 pairs — heterogeneous across AND within
+pairs), replaying the same Azure-style trace under all three routers.
+Expected shape: throughput grows and tail TTFT falls with pair count;
+session affinity pays a modest tail penalty for stickiness.
+
+The final ``naive_mix`` row adds bare A10 workers to a pair instead of
+scaling pairs: a straggler lesson — in max-throughput mode the slow
+standalone workers inflate the makespan and *reduce* measured throughput,
+which is why scale-out here composes pairs rather than loose devices
+(exactly the load-imbalance failure mode the paper's Table 3 documents for
+naive disaggregation, resurfacing at cluster scope).
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+from benchmarks.common import emit_csv_row
+from repro.cluster import build_cluster
+from repro.cluster.router import ROUTERS
+from repro.configs import get_config
+from repro.serving.trace import make_trace
+
+# (label, spec, #engines); rows 2+ are heterogeneous clusters
+CLUSTERS = [
+    ("pair1", "cronus:A100+A10", 2),
+    ("pair2", "2xcronus:A100+A10", 4),
+    ("pair3_het", "2xcronus:A100+A10,cronus:A100+A30", 6),
+    ("naive_mix", "cronus:A100+A10,2xworker:A10", 4),
+]
+
+
+def run(n_requests: int = 300, arch: str = "llama3-8b",
+        interval: float = 0.0, sessions: int = 32):
+    cfg = get_config(arch)
+    reqs = make_trace(n_requests, seed=0, interval=interval,
+                      sessions=sessions)
+    results = {}
+    print("name,us_per_call,derived")
+    for label, spec, n_engines in CLUSTERS:
+        for router in sorted(ROUTERS):
+            system = build_cluster(cfg, spec, router=router)
+            assert len(system.engines) == n_engines
+            t0 = time.time()
+            m = system.run([copy.deepcopy(r) for r in reqs])
+            wall = (time.time() - t0) * 1e6 / max(n_requests, 1)
+            results[(label, router)] = m
+            emit_csv_row(
+                f"cluster_scaling/{label}({n_engines}eng)/{router}", wall,
+                f"tput={m['throughput']:.2f}req/s "
+                f"ttft_p99={m['ttft_p99']:.2f}s "
+                f"tbt_p99={m['tbt_p99']*1e3:.1f}ms "
+                f"completed={m['completed']}")
+    # scaling headline: throughput of the biggest pair cluster vs one pair
+    for router in sorted(ROUTERS):
+        base = results[("pair1", router)]["throughput"]
+        top = results[("pair3_het", router)]["throughput"]
+        emit_csv_row(f"cluster_scaling_ratio/{router}", 0,
+                     f"x{top / base:.2f} (2->6 engines)")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=300)
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--interval", type=float, default=0.0,
+                    help="arrival interval (s); 0 = all at t0")
+    args = ap.parse_args()
+    run(n_requests=args.n, arch=args.arch, interval=args.interval)

@@ -17,10 +17,11 @@ def main() -> None:
                     help="comma-separated bench names")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_balancer_ablation, bench_fig3_predictor_fit,
-                            bench_fig4_latency, bench_kernels,
-                            bench_offload_limitation, bench_roofline,
-                            bench_table2_throughput, bench_table3_utilization)
+    from benchmarks import (bench_balancer_ablation, bench_cluster_scaling,
+                            bench_fig3_predictor_fit, bench_fig4_latency,
+                            bench_kernels, bench_offload_limitation,
+                            bench_roofline, bench_table2_throughput,
+                            bench_table3_utilization)
 
     n2 = 250 if args.quick else 600
     n4 = 200 if args.quick else 400
@@ -33,6 +34,8 @@ def main() -> None:
             n_requests=n4),
         "offload_limitation": lambda: bench_offload_limitation.run(
             n_requests=n4),
+        "cluster_scaling": lambda: bench_cluster_scaling.run(
+            n_requests=150 if args.quick else 300),
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }

@@ -1,15 +1,19 @@
 """End-to-end driver: replay an Azure-style trace against all five serving
 approaches on a simulated A100+A10 cluster (paper §5 conditions: 1000
 conversation requests, mean in 1014 / out 247) and print the Table-2/Fig-4
-style comparison.
+style comparison — then scale out to a multi-pair cluster and compare the
+three request routers.
 
   PYTHONPATH=src python examples/serve_cluster_comparison.py [--n 1000]
 """
 import argparse
+import copy
 import sys
 
 sys.path.insert(0, "src")
 
+from repro.cluster import build_cluster
+from repro.cluster.router import ROUTERS
 from repro.configs import get_config
 from repro.serving.hardware import A10, A100
 from repro.serving.simulator import APPROACHES, compare_all
@@ -40,6 +44,16 @@ def main():
     for a in APPROACHES:
         m = res[a]
         print(f"{a:12s} ttft_p99={m['ttft_p99']:8.3f}s "
+              f"tbt_p99={m['tbt_p99']*1e3:7.1f}ms")
+
+    spec = "2xcronus:A100+A10,2xworker:A10"
+    print(f"\n== cluster scale-out: {spec} (6 engines), router comparison ==")
+    reqs = make_trace(min(args.n, 600), seed=2, interval=1 / 12.0, sessions=48)
+    for router in sorted(ROUTERS):
+        system = build_cluster(cfg, spec, router=router)
+        m = system.run([copy.deepcopy(r) for r in reqs])
+        print(f"{router:12s} tput={m['throughput']:6.2f}req/s "
+              f"ttft_p99={m['ttft_p99']:8.3f}s "
               f"tbt_p99={m['tbt_p99']*1e3:7.1f}ms")
 
 

@@ -1,0 +1,30 @@
+"""Cluster runtime: many engines, one event loop, pluggable routing.
+
+Layering (bottom-up):
+  * ``repro.core.engine.Engine`` — one serving instance (device + executor).
+  * ``repro.cluster.runtime.Endpoint`` — a routable unit: a standalone
+    worker, or a Cronus PPI+CPI pair (``repro.cluster.pair``).
+  * ``repro.cluster.runtime.ClusterRuntime`` — the event loop that advances
+    the globally-lagging runnable engine and fires timed events (arrivals,
+    KV-transfer completions).
+  * ``repro.cluster.router`` — picks an endpoint per request (round-robin,
+    least-loaded, session-affinity).
+  * ``repro.cluster.topology`` — builds a whole heterogeneous cluster from
+    a declarative spec such as ``"2xcronus:A100+A10,4xworker:A10"``.
+"""
+from repro.cluster.pair import CronusPairEndpoint
+from repro.cluster.router import (LeastLoadedRouter, Router, RoundRobinRouter,
+                                  SessionAffinityRouter, make_router)
+from repro.cluster.runtime import (ClusterRuntime, Endpoint, EndpointStats,
+                                   WorkerEndpoint)
+from repro.cluster.topology import (ClusterSpec, ClusterSystem, NodeSpec,
+                                    build_cluster, parse_cluster_spec)
+
+__all__ = [
+    "ClusterRuntime", "Endpoint", "EndpointStats", "WorkerEndpoint",
+    "CronusPairEndpoint",
+    "Router", "RoundRobinRouter", "LeastLoadedRouter",
+    "SessionAffinityRouter", "make_router",
+    "ClusterSpec", "NodeSpec", "ClusterSystem", "build_cluster",
+    "parse_cluster_spec",
+]

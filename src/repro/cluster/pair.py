@@ -1,0 +1,120 @@
+"""The Cronus PPI+CPI pair as a cluster endpoint.
+
+This is the per-pair protocol of paper §4.2 (steps 1-7), extracted verbatim
+from the old ``CronusSystem.run`` loop so that any number of pairs can sit
+behind one :class:`~repro.cluster.runtime.ClusterRuntime`:
+
+  (1) on submit, pull CPI stats;
+  (2) Balancer chooses the partial prefill length L_p;
+  (3) dispatch R[:L_p] to the PPI (<= ``max_ppi_requests`` resident);
+  (4) PPI completion surfaces in ``ppi.completed_prefills`` — ``pump``
+      turns each into a timed KV-transfer-completion event;
+  (5-7) the event delivers the request (with its KV payload) to the CPI,
+      whose next iteration ingests the transfer overlapped with compute.
+
+Decode offload (paper §6, bounded by ``max_offload_frac``) keeps requests
+whose prefill fell back to the full prompt on the PPI — they re-enter the
+PPI as local-payload decoders instead of crossing to the CPI.
+
+The disaggregated baselines are this same endpoint with a FixedBalancer
+(partial length pinned to L_in) and a decode-only CPI.
+"""
+from __future__ import annotations
+
+import copy
+from typing import List, Optional, Tuple
+
+from repro.core.engine import Engine
+from repro.core.request import ReqState, Request
+from repro.cluster.runtime import Endpoint
+
+
+class CronusPairEndpoint(Endpoint):
+    def __init__(self, name: str, ppi: Engine, cpi: Engine, balancer,
+                 max_ppi_requests: int = 2, decode_offload: bool = False,
+                 max_offload_frac: float = 0.5):
+        self.name = name
+        self.ppi = ppi
+        self.cpi = cpi
+        self.balancer = balancer
+        self.max_ppi_requests = max_ppi_requests
+        self.decode_offload = decode_offload
+        self.max_offload_frac = max_offload_frac
+        self._in_ppi = {}       # ppi view req_id -> original request
+        self._offloaded = set()
+
+    @property
+    def engines(self) -> Tuple[Engine, ...]:
+        return (self.ppi, self.cpi)
+
+    # ------------------------------------------------------------------
+    def _ppi_prefill_load(self) -> int:
+        # offloaded decoders don't count against the paper's <=2 cap
+        return len(self._in_ppi) + sum(
+            1 for r in self.ppi.queue if r.req_id not in self._offloaded
+            and r.req_id not in self._in_ppi)
+
+    def can_accept(self, req: Request) -> bool:
+        load = self._ppi_prefill_load()
+        if load >= self.max_ppi_requests:
+            return False
+        # a future arrival may only claim an *idle* PPI (its clock then
+        # jumps to the arrival); a busy PPI makes the router wait
+        return req.arrival <= self.ppi.clock or load == 0
+
+    def submit(self, req: Request, runtime=None):
+        self.ppi.clock = max(self.ppi.clock, req.arrival)
+        stats = self.cpi.stats()                            # step (1)
+        l_p = self.balancer.partial_prefill_length(          # step (2)
+            req.input_len, stats)
+        req.partial_len = int(l_p)
+        if (self.decode_offload and l_p >= req.input_len
+                and not self.balancer.__class__.__name__.startswith("Fixed")):
+            # Alg. 1 fell back (CPI out of KV blocks) -> offload the whole
+            # request to the PPI (§6), but only while the PPI keeps
+            # >= (1 - max_offload_frac) of its KV pool free for prefills
+            alloc = self.ppi.allocator
+            need = alloc.blocks_needed(req.input_len + req.output_len)
+            budget = int(alloc.num_blocks * self.max_offload_frac)
+            used = alloc.num_blocks - alloc.num_free
+            if used + need <= budget:
+                self._offloaded.add(req.req_id)
+        view = copy.copy(req)                                # step (3)
+        view.prompt = req.prompt[:req.partial_len]
+        view.output_len = 0
+        view.ready_time = req.arrival
+        view.state = ReqState.WAITING
+        view.context_len = 0
+        self._in_ppi[view.req_id] = req
+        self.ppi.add_request(view)
+
+    # ------------------------------------------------------------------
+    def pump(self, runtime=None):
+        """Steps (4-5): each completed PPI prefill becomes a KV-transfer
+        completion event that delivers the request to the CPI (or back to
+        the PPI for offloaded decoders). The transfer *cost* is charged by
+        the receiving engine when it ingests the payload (steps 6-7)."""
+        while self.ppi.completed_prefills:
+            t_done, view = self.ppi.completed_prefills.pop(0)
+            orig = self._in_ppi.pop(view.req_id)
+            orig.partial_len = view.context_len
+            orig.context_len = view.context_len
+            orig.kv_payload = view.kv_payload
+            orig.first_token = view.first_token
+            orig.ready_time = t_done
+            if orig.req_id in self._offloaded:
+                orig.local_payload = True        # KV never leaves the PPI
+                target = self.ppi
+            else:
+                target = self.cpi
+            if runtime is not None:
+                runtime.post(t_done,
+                             lambda r=orig, e=target: e.add_request(r))
+            else:
+                target.add_request(orig)
+
+    def finished(self) -> List[Request]:
+        return list(self.cpi.finished) + list(self.ppi.finished)
+
+    def n_finished(self) -> int:
+        return len(self.cpi.finished) + len(self.ppi.finished)

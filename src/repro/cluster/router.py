@@ -1,0 +1,108 @@
+"""Pluggable request routers for the cluster runtime.
+
+A router picks, for each arriving request, which endpoint (Cronus pair /
+DP worker / disaggregated pool) serves it. ``select`` returns ``None``
+when the chosen endpoint cannot take the request yet — the runtime then
+retries after engines advance (head-of-line order, matching the dispatch
+discipline of the per-system loops this subsystem replaced).
+
+Policies:
+  * :class:`RoundRobinRouter` — optionally weighted (paper §5.1's DP
+    baseline uses weights 3:1 for A100:A10); probes endpoints in pattern
+    order starting after the previous placement.
+  * :class:`LeastLoadedRouter` — smallest queue depth first, most free KV
+    blocks (via ``Engine.stats``) as the tie-break, so an empty cluster
+    routes to the endpoint with the deepest free KV pool.
+  * :class:`SessionAffinityRouter` — requests carrying a ``session`` stick
+    to the endpoint that served the session first (KV reuse locality for
+    multi-turn conversations); session-less requests and first turns fall
+    through to an inner policy (least-loaded by default).
+"""
+from __future__ import annotations
+
+import abc
+from typing import List, Optional, Sequence
+
+from repro.cluster.runtime import Endpoint
+from repro.core.request import Request
+
+
+class Router(abc.ABC):
+    @abc.abstractmethod
+    def select(self, req: Request,
+               endpoints: Sequence[Endpoint]) -> Optional[Endpoint]:
+        """Endpoint to serve ``req``, or ``None`` to retry later."""
+
+
+class RoundRobinRouter(Router):
+    def __init__(self, weights: Optional[List[int]] = None):
+        self.weights = weights
+        self._pattern: Optional[List[int]] = None
+        self._idx = 0
+
+    def _pat(self, n: int) -> List[int]:
+        if self._pattern is None:
+            w = self.weights or [1] * n
+            if len(w) != n:
+                raise ValueError(f"{len(w)} weights for {n} endpoints")
+            self._pattern = [i for i, wi in enumerate(w) for _ in range(wi)]
+        return self._pattern
+
+    def select(self, req, endpoints):
+        pat = self._pat(len(endpoints))
+        for probe in range(len(pat)):
+            ep = endpoints[pat[(self._idx + probe) % len(pat)]]
+            if ep.can_accept(req):
+                self._idx = (self._idx + probe + 1) % len(pat)
+                return ep
+        return None
+
+
+class LeastLoadedRouter(Router):
+    def select(self, req, endpoints):
+        best, best_key = None, None
+        for i, ep in enumerate(endpoints):
+            if not ep.can_accept(req):
+                continue
+            s = ep.stats()
+            key = (s.queue_depth, -s.free_kv_blocks, i)
+            if best_key is None or key < best_key:
+                best, best_key = ep, key
+        return best
+
+
+class SessionAffinityRouter(Router):
+    # a sticky head whose home endpoint is full returns None; let the
+    # runtime place up to this many queued requests past it so one pinned
+    # session doesn't convoy the whole arrival queue
+    lookahead = 64
+
+    def __init__(self, fallback: Optional[Router] = None):
+        self.fallback = fallback or LeastLoadedRouter()
+        self._table = {}   # session id -> endpoint
+
+    def select(self, req, endpoints):
+        sess = getattr(req, "session", None)
+        if sess is not None and sess in self._table:
+            ep = self._table[sess]
+            # sticky: wait for the home endpoint rather than migrate KV
+            return ep if ep.can_accept(req) else None
+        ep = self.fallback.select(req, endpoints)
+        if ep is not None and sess is not None:
+            self._table[sess] = ep
+        return ep
+
+
+ROUTERS = {
+    "round_robin": RoundRobinRouter,
+    "least_loaded": LeastLoadedRouter,
+    "session": SessionAffinityRouter,
+}
+
+
+def make_router(name: str, **kw) -> Router:
+    try:
+        return ROUTERS[name](**kw)
+    except KeyError:
+        raise KeyError(f"unknown router {name!r}; "
+                       f"choose from {sorted(ROUTERS)}") from None

@@ -1,0 +1,228 @@
+"""Event-driven cluster runtime (xoscar-style actor loop, single process).
+
+Before this module, each system class (Cronus, DP, PP) carried a private
+copy of the same discrete-event loop: dispatch arrivals, move KV handoffs,
+advance the lagging engine, jump clocks when idle. ``ClusterRuntime``
+is that loop, written once, over an arbitrary set of *endpoints*:
+
+  * an :class:`Endpoint` is a routable unit that accepts requests — a
+    standalone chunked-prefill worker (:class:`WorkerEndpoint`) or a Cronus
+    PPI+CPI pair (``repro.cluster.pair.CronusPairEndpoint``);
+  * engines register with the runtime through their endpoint's ``engines``
+    tuple and are advanced lagging-first (the engine with the smallest
+    local clock that can make progress steps next — the same rule the
+    per-system loops used, now global across the whole cluster);
+  * timed events (KV-transfer completions posted by endpoints via
+    :meth:`ClusterRuntime.post`) are kept in a heap and delivered eagerly
+    in (time, seq) order — eager because engine admission gates on each
+    request's ``ready_time``, so delivery order is deterministic and
+    execution can never start before the event's timestamp.
+
+Request timing is enforced by the engines themselves (``arrival`` /
+``ready_time`` gate admission), so delivering a routed request into an
+engine's queue "early" never lets it run early — which is what makes this
+single loop bit-compatible with the three loops it replaced.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.engine import Engine
+from repro.core.metrics import aggregate
+from repro.core.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class EndpointStats:
+    """Load snapshot the routers use (free KV blocks via ``Engine.stats``)."""
+    queue_depth: int        # queued + resident, not yet finished
+    free_kv_blocks: int     # free blocks on the endpoint's decode engine
+    clock: float            # max engine clock (how far this endpoint has run)
+
+
+class Endpoint(abc.ABC):
+    """A routable unit of the cluster: one or more engines + local policy."""
+
+    name: str
+
+    @property
+    @abc.abstractmethod
+    def engines(self) -> Tuple[Engine, ...]:
+        """Engines this endpoint registers with the runtime (order = tie
+        order for lagging-first advancement)."""
+
+    @abc.abstractmethod
+    def can_accept(self, req: Request) -> bool:
+        """May the router hand this request over right now?"""
+
+    @abc.abstractmethod
+    def submit(self, req: Request, runtime: Optional["ClusterRuntime"] = None):
+        """Take ownership of a routed request."""
+
+    def pump(self, runtime: Optional["ClusterRuntime"] = None):
+        """Move internal handoffs (e.g. PPI->CPI KV transfers). Default: none."""
+
+    @abc.abstractmethod
+    def finished(self) -> List[Request]:
+        """Requests that completed on this endpoint."""
+
+    def n_finished(self) -> int:
+        """Completion count — hot path; override to avoid list copies."""
+        return len(self.finished())
+
+    def stats(self) -> EndpointStats:
+        engines = self.engines
+        queued = sum(len(e.queue) for e in engines) + sum(
+            1 for e in engines for r in e.slots if r is not None)
+        decode = engines[-1]   # pairs put the decode engine last
+        return EndpointStats(
+            queue_depth=queued,
+            free_kv_blocks=decode.stats().free_kv_blocks,
+            clock=max(e.clock for e in engines),
+        )
+
+
+class WorkerEndpoint(Endpoint):
+    """A standalone chunked-prefill+decode instance (DP worker, or the
+    single fused engine of the PP baseline).
+
+    ``queue_cap`` bounds the *waiting queue* only (paper §5.1's DP caps);
+    ``None`` means unbounded (PP: everything funnels into one engine).
+    """
+
+    def __init__(self, name: str, engine: Engine,
+                 queue_cap: Optional[int] = None):
+        self.name = name
+        self.engine = engine
+        self.queue_cap = queue_cap
+
+    @property
+    def engines(self) -> Tuple[Engine, ...]:
+        return (self.engine,)
+
+    def can_accept(self, req: Request) -> bool:
+        if self.queue_cap is None:
+            return True
+        return len(self.engine.queue) < self.queue_cap
+
+    def submit(self, req: Request, runtime=None):
+        req.ready_time = req.arrival
+        self.engine.add_request(req)
+
+    def finished(self) -> List[Request]:
+        return list(self.engine.finished)
+
+    def n_finished(self) -> int:
+        return len(self.engine.finished)
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable[[], None] = dataclasses.field(compare=False)
+
+
+class ClusterRuntime:
+    """The shared event loop. One instance per ``run()`` of a trace."""
+
+    def __init__(self, endpoints: Sequence[Endpoint], router):
+        self.endpoints = list(endpoints)
+        self.router = router
+        self.engines: List[Engine] = [e for ep in self.endpoints
+                                      for e in ep.engines]
+        self._events: List[_Event] = []
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------------
+    # timed events
+    # ------------------------------------------------------------------
+    def post(self, time: float, fn: Callable[[], None]):
+        """Schedule ``fn`` at simulated time ``time`` (KV-transfer
+        completions, deferred re-injections, ...)."""
+        heapq.heappush(self._events, _Event(time, next(self._seq), fn))
+
+    def _drain_events(self):
+        # Delivery is EAGER: a routed request can't execute before its
+        # ready_time anyway (engine admission gates on it), so holding an
+        # event back until clocks reach its timestamp would only delay the
+        # receiving queue, not change timing. The heap's job is to fire
+        # simultaneous deliveries in deterministic (time, seq) order.
+        while self._events:
+            heapq.heappop(self._events).fn()
+
+    # ------------------------------------------------------------------
+    def n_finished(self) -> int:
+        return sum(ep.n_finished() for ep in self.endpoints)
+
+    def _dispatch(self, pending: deque):
+        """Route pending arrivals in head-of-line order (the discipline of
+        the per-system loops this replaced). Routers that defer the head
+        for placement reasons of their own (session stickiness) may opt
+        into a bounded ``lookahead`` window so one pinned request doesn't
+        convoy the unrelated traffic queued behind it."""
+        while pending:
+            ep = self.router.select(pending[0], self.endpoints)
+            if ep is not None:
+                ep.submit(pending.popleft(), self)
+                continue
+            window = getattr(self.router, "lookahead", 0)
+            placed_at = None
+            for i, req in enumerate(pending):
+                if i == 0:
+                    continue
+                if i > window:
+                    break
+                ep = self.router.select(req, self.endpoints)
+                if ep is not None:
+                    placed_at = i
+                    break
+            if placed_at is None:
+                break   # nothing in the window can be placed right now
+            req = pending[placed_at]
+            del pending[placed_at]
+            ep.submit(req, self)
+
+    def run(self, requests: List[Request], max_steps: int = 10_000_000):
+        """Replay a trace over the cluster; returns aggregate metrics."""
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        total = len(requests)
+        steps = 0
+
+        while self.n_finished() < total and steps < max_steps:
+            steps += 1
+            self._dispatch(pending)
+
+            # ---- internal handoffs; fire what they posted --------------
+            for ep in self.endpoints:
+                ep.pump(self)
+            self._drain_events()
+
+            # ---- advance the globally-lagging runnable engine ----------
+            progressed = False
+            for eng in sorted(self.engines, key=lambda e: e.clock):
+                if eng.runnable():
+                    eng.step()
+                    progressed = True
+                    break
+            if not progressed:
+                # cluster idle: jump every clock to the next event time
+                # (pump deliveries drained above, so only engine ready
+                # times and undispatched arrivals remain)
+                nexts = [t for e in self.engines
+                         if (t := e.next_ready_time()) is not None]
+                if pending:
+                    nexts.append(pending[0].arrival)
+                if not nexts:
+                    break   # deadlock guard (shouldn't happen)
+                t = min(nexts)
+                for e in self.engines:
+                    e.clock = max(e.clock, t)
+
+        return aggregate([r.metrics for ep in self.endpoints
+                          for r in ep.finished()])

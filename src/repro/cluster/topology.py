@@ -1,0 +1,191 @@
+"""Declarative cluster topology: compose N heterogeneous devices into any
+mix of Cronus pairs, standalone workers, disaggregated pools and pipeline
+stages, fronted by one router.
+
+A spec is a list of :class:`NodeSpec` (or the compact string DSL):
+
+    "2xcronus:A100+A10,4xworker:A10"
+        -> two Cronus PPI(A10)+CPI(A100) pairs and four standalone A10
+           chunked-prefill workers behind one router.
+
+Node kinds:
+  * ``cronus:HI+LO``    — Balancer-split pair, prefill on LO, decode on HI
+  * ``disagg_lh:HI+LO`` — full prefill on LO, decode-only HI
+  * ``disagg_hl:HI+LO`` — full prefill on HI, decode-only LO
+  * ``worker:DEV``      — standalone chunked-prefill+decode instance
+                          (alias: ``dp``)
+  * ``pp:HI+LO``        — two-stage pipeline fused into one engine
+
+``build_cluster`` turns a spec into a :class:`ClusterSystem` whose
+``run(requests)`` replays a trace through the shared event loop. A
+single-``cronus`` spec builds exactly the engines ``build_cronus`` builds,
+so a 1-pair cluster reproduces ``CronusSystem`` results to the bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.cluster.router import Router, make_router
+from repro.cluster.runtime import ClusterRuntime, Endpoint, WorkerEndpoint
+from repro.core.engine import Engine, EngineConfig
+from repro.serving.hardware import DEVICES, DeviceModel, DeviceSpec
+
+PAIR_KINDS = ("cronus", "disagg_lh", "disagg_hl")
+NODE_KINDS = PAIR_KINDS + ("worker", "pp")
+
+_NODE_RE = re.compile(r"^(?:(\d+)x)?([a-z_]+):([A-Za-z0-9+]+)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    kind: str                       # one of NODE_KINDS
+    devices: Tuple[str, ...]        # ("A100", "A10") for pairs, ("A10",) ...
+    count: int = 1
+    options: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        kind = "worker" if self.kind == "dp" else self.kind
+        object.__setattr__(self, "kind", kind)
+        if kind not in NODE_KINDS:
+            raise ValueError(f"unknown node kind {self.kind!r}")
+        if self.count < 1:
+            raise ValueError(f"node count must be >= 1, got {self.count}")
+        want = 1 if kind == "worker" else 2
+        if len(self.devices) != want:
+            raise ValueError(f"{kind} takes {want} device(s), "
+                             f"got {self.devices}")
+        for d in self.devices:
+            if d not in DEVICES:
+                raise ValueError(f"unknown device {d!r}; "
+                                 f"choose from {sorted(DEVICES)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    nodes: Tuple[NodeSpec, ...]
+    router: str = "least_loaded"
+
+    @property
+    def n_engines(self) -> int:
+        per = {"worker": 1, "pp": 1}
+        return sum(per.get(n.kind, 2) * n.count for n in self.nodes)
+
+
+def parse_cluster_spec(text: str, router: str = "least_loaded") -> ClusterSpec:
+    """Parse the compact DSL, e.g. ``"2xcronus:A100+A10,4xworker:A10"``."""
+    nodes = []
+    for part in filter(None, (p.strip() for p in text.split(","))):
+        m = _NODE_RE.match(part)
+        if m is None:
+            raise ValueError(f"bad node spec {part!r} "
+                             "(expected [<count>x]<kind>:<dev>[+<dev>])")
+        count, kind, devs = m.groups()
+        nodes.append(NodeSpec(kind=kind, devices=tuple(devs.split("+")),
+                              count=int(count or 1)))
+    if not nodes:
+        raise ValueError(f"empty cluster spec {text!r}")
+    return ClusterSpec(nodes=tuple(nodes), router=router)
+
+
+# ---------------------------------------------------------------------------
+# builder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClusterSystem:
+    """A built cluster: endpoints + router, run through the shared loop."""
+    endpoints: List[Endpoint]
+    router: Router
+
+    @property
+    def engines(self) -> List[Engine]:
+        return [e for ep in self.endpoints for e in ep.engines]
+
+    def finished(self):
+        return [r for ep in self.endpoints for r in ep.finished()]
+
+    def run(self, requests, max_steps: int = 10_000_000):
+        return ClusterRuntime(self.endpoints, self.router).run(
+            requests, max_steps)
+
+
+def _null_factory(role: str):
+    from repro.core.executor import NullExecutor
+    return NullExecutor()
+
+
+def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
+                  router: Optional[Union[str, Router]] = None,
+                  executor_factory: Optional[Callable] = None,
+                  max_slots: int = 256, block_size: int = 16,
+                  max_batched_tokens: int = 512,
+                  worker_queue_cap: Optional[int] = 4) -> ClusterSystem:
+    """Materialise a :class:`ClusterSpec` into engines + endpoints.
+
+    ``executor_factory(role)`` is called with ``"ppi"``/``"cpi"`` for pair
+    engines and ``"worker"``/``"pp"`` for standalone ones (None -> real
+    compute off, roofline timing only).
+    """
+    # imported lazily: core.cronus/baselines import the cluster runtime
+    from repro.core.balancer import Balancer
+    from repro.core.baselines import PipelineDeviceModel
+    from repro.core.cronus import build_cronus, build_disaggregated
+    from repro.core.predictor import profile_chunked, profile_prefill
+
+    if isinstance(spec, str):
+        spec = parse_cluster_spec(spec)
+    executor_factory = executor_factory or _null_factory
+    kw = dict(executor_factory=executor_factory, max_slots=max_slots,
+              block_size=block_size, max_batched_tokens=max_batched_tokens)
+
+    endpoints: List[Endpoint] = []
+    for node in spec.nodes:
+        for i in range(node.count):
+            name = f"{node.kind}{len(endpoints)}"
+            if node.kind in PAIR_KINDS:
+                hi_spec, lo_spec = (DEVICES[d] for d in node.devices)
+                hi, lo = DeviceModel(hi_spec, cfg), DeviceModel(lo_spec, cfg)
+                if node.kind == "cronus":
+                    bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+                    system = build_cronus(
+                        cfg, lo, hi, balancer=bal,
+                        decode_offload=node.options.get("decode_offload",
+                                                        False), **kw)
+                elif node.kind == "disagg_lh":
+                    system = build_disaggregated(cfg, lo, hi, **kw)
+                else:                                   # disagg_hl
+                    system = build_disaggregated(cfg, hi, lo, **kw)
+                endpoints.append(system.endpoint(name))
+            elif node.kind == "pp":
+                hi_spec, lo_spec = (DEVICES[d] for d in node.devices)
+                device = PipelineDeviceModel(hi_spec, lo_spec, cfg)
+                eng = Engine(name, cfg,
+                             EngineConfig(
+                                 max_batched_tokens=max_batched_tokens,
+                                 max_slots=max_slots, block_size=block_size,
+                                 num_kv_blocks=max(
+                                     device.kv_block_budget(block_size), 64)),
+                             device, executor_factory("pp"))
+                endpoints.append(WorkerEndpoint(name, eng, queue_cap=None))
+            else:                                        # worker
+                dev = DeviceModel(DEVICES[node.devices[0]], cfg)
+                eng = Engine(name, cfg,
+                             EngineConfig(
+                                 max_batched_tokens=node.options.get(
+                                     "max_batched_tokens", max_batched_tokens),
+                                 max_slots=max_slots, block_size=block_size,
+                                 num_kv_blocks=max(
+                                     dev.kv_block_budget(block_size), 64)),
+                             dev, executor_factory("worker"))
+                endpoints.append(WorkerEndpoint(
+                    name, eng,
+                    queue_cap=node.options.get("queue_cap",
+                                               worker_queue_cap)))
+
+    if router is None:
+        router = spec.router
+    if isinstance(router, str):
+        router = make_router(router)
+    return ClusterSystem(endpoints=endpoints, router=router)

@@ -6,11 +6,11 @@ pinned partial length, exactly as the paper's evaluation does).
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Callable, List
 
+from repro.cluster.router import RoundRobinRouter
+from repro.cluster.runtime import ClusterRuntime, WorkerEndpoint
 from repro.core.engine import Engine, EngineConfig
-from repro.core.metrics import aggregate
 from repro.core.request import Request
 from repro.serving.hardware import (DeviceModel, DeviceSpec, active_param_bytes,
                                     attn_flops, kv_bytes_per_token,
@@ -31,51 +31,17 @@ class DPSystem:
     weights: List[int]
     queue_caps: List[int]
 
+    def endpoints(self) -> List[WorkerEndpoint]:
+        return [WorkerEndpoint(e.name, e, queue_cap=cap)
+                for e, cap in zip(self.engines, self.queue_caps)]
+
     def run(self, requests: List[Request], max_steps: int = 10_000_000):
-        arrivals = deque(sorted(requests, key=lambda r: r.arrival))
-        total = len(requests)
-        pattern = [i for i, w in enumerate(self.weights) for _ in range(w)]
-        pat_idx = 0
-        steps = 0
-        while (sum(len(e.finished) for e in self.engines) < total
-               and steps < max_steps):
-            steps += 1
-            # dispatch: weighted round-robin among engines with queue space;
-            # ready_time keeps engines from running future arrivals early
-            while arrivals:
-                req = arrivals[0]
-                placed = False
-                for probe in range(len(pattern)):
-                    eng_i = pattern[(pat_idx + probe) % len(pattern)]
-                    eng = self.engines[eng_i]
-                    if len(eng.queue) < self.queue_caps[eng_i]:
-                        arrivals.popleft()
-                        req.ready_time = req.arrival
-                        eng.add_request(req)
-                        pat_idx = (pat_idx + probe + 1) % len(pattern)
-                        placed = True
-                        break
-                if not placed:
-                    break
-            # advance
-            progressed = False
-            for eng in sorted(self.engines, key=lambda e: e.clock):
-                if eng.runnable():
-                    eng.step()
-                    progressed = True
-                    break
-            if not progressed:
-                nexts = [t for e in self.engines
-                         if (t := e.next_ready_time()) is not None]
-                if arrivals:
-                    nexts.append(arrivals[0].arrival)
-                if not nexts:
-                    break
-                t = min(nexts)
-                for e in self.engines:
-                    e.clock = max(e.clock, t)
-        metrics = [r.metrics for e in self.engines for r in e.finished]
-        return aggregate(metrics)
+        # ready_time (set by WorkerEndpoint.submit) keeps engines from
+        # running future arrivals early, so eager weighted-RR dispatch into
+        # the shared cluster loop matches the old private loop exactly
+        runtime = ClusterRuntime(self.endpoints(),
+                                 RoundRobinRouter(weights=self.weights))
+        return runtime.run(requests, max_steps)
 
 
 def build_dp(cfg, hi_device: DeviceModel, lo_device: DeviceModel, *,
@@ -162,25 +128,11 @@ class PPSystem:
     engine: Engine
 
     def run(self, requests: List[Request], max_steps: int = 10_000_000):
-        arrivals = deque(sorted(requests, key=lambda r: r.arrival))
-        total = len(requests)
-        steps = 0
-        while len(self.engine.finished) < total and steps < max_steps:
-            steps += 1
-            while arrivals and arrivals[0].arrival <= self.engine.clock:
-                req = arrivals.popleft()
-                req.ready_time = req.arrival
-                self.engine.add_request(req)
-            if self.engine.runnable():
-                self.engine.step()
-            elif arrivals:
-                self.engine.clock = max(self.engine.clock, arrivals[0].arrival)
-            else:
-                t = self.engine.next_ready_time()
-                if t is None:
-                    break
-                self.engine.clock = max(self.engine.clock, t)
-        return aggregate([r.metrics for r in self.engine.finished])
+        # single unbounded endpoint: FCFS into the one fused-pipeline engine
+        runtime = ClusterRuntime(
+            [WorkerEndpoint(self.engine.name, self.engine, queue_cap=None)],
+            RoundRobinRouter())
+        return runtime.run(requests, max_steps)
 
 
 def build_pp(cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec, *,

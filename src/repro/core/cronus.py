@@ -21,18 +21,24 @@ length"), and the CPI flipped to decode-only. High->Low swaps the devices.
 
 Time is simulated (engines carry local clocks advanced by the device
 roofline model); compute is real or null depending on the executor.
+
+The per-pair protocol itself lives in ``repro.cluster.pair`` (so that N
+pairs can share one cluster); ``CronusSystem`` is the single-pair facade:
+``run()`` wraps the pair in a one-endpoint cluster and replays the trace
+through the shared event loop in ``repro.cluster.runtime``.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
-from collections import deque
 from typing import Callable, List, Optional
 
-from repro.core.balancer import Balancer
+from typing import TYPE_CHECKING
+
 from repro.core.engine import Engine, EngineConfig
-from repro.core.metrics import aggregate
-from repro.core.request import ReqState, Request
+from repro.core.request import Request
+
+if TYPE_CHECKING:  # runtime imports are deferred: cluster.* imports core.*
+    from repro.cluster.pair import CronusPairEndpoint
 
 
 class FixedBalancer:
@@ -63,92 +69,22 @@ class CronusSystem:
     decode_offload: bool = False
     max_offload_frac: float = 0.5
 
+    def endpoint(self, name: str = "cronus") -> "CronusPairEndpoint":
+        """This pair as a routable cluster endpoint (fresh handoff state)."""
+        from repro.cluster.pair import CronusPairEndpoint
+        return CronusPairEndpoint(
+            name, self.ppi, self.cpi, self.balancer,
+            max_ppi_requests=self.max_ppi_requests,
+            decode_offload=self.decode_offload,
+            max_offload_frac=self.max_offload_frac)
+
     def run(self, requests: List[Request], max_steps: int = 10_000_000):
-        arrivals = deque(sorted(requests, key=lambda r: r.arrival))
-        total = len(requests)
-        in_ppi = {}      # ppi view -> original
-        offloaded = set()
-        steps = 0
-
-        def ppi_prefill_load():
-            # offloaded decoders don't count against the paper's <=2 cap
-            return len(in_ppi) + sum(
-                1 for r in self.ppi.queue if r.req_id not in offloaded
-                and r.req_id not in in_ppi)
-
-        def n_done():
-            return len(self.cpi.finished) + len(self.ppi.finished)
-
-        while n_done() < total and steps < max_steps:
-            steps += 1
-            # ---- frontend dispatch: fill the PPI up to its cap ----------
-            while arrivals and ppi_prefill_load() < self.max_ppi_requests:
-                req = arrivals[0]
-                if req.arrival > self.ppi.clock and ppi_prefill_load() > 0:
-                    break  # PPI still busy; revisit after it advances
-                arrivals.popleft()
-                self.ppi.clock = max(self.ppi.clock, req.arrival)
-                stats = self.cpi.stats()                       # step (1)
-                l_p = self.balancer.partial_prefill_length(     # step (2)
-                    req.input_len, stats)
-                req.partial_len = int(l_p)
-                if (self.decode_offload and l_p >= req.input_len
-                        and not self.balancer.__class__.__name__.startswith(
-                            "Fixed")):
-                    # Alg.1 fell back (CPI out of KV blocks) -> offload the
-                    # whole request to the PPI (§6), but only while the PPI
-                    # keeps >= (1 - max_offload_frac) of its KV pool free
-                    # for its prefill duties
-                    alloc = self.ppi.allocator
-                    need = alloc.blocks_needed(req.input_len + req.output_len)
-                    budget = int(alloc.num_blocks * self.max_offload_frac)
-                    used = alloc.num_blocks - alloc.num_free
-                    if used + need <= budget:
-                        offloaded.add(req.req_id)
-                view = copy.copy(req)                           # step (3)
-                view.prompt = req.prompt[:req.partial_len]
-                view.output_len = 0
-                view.ready_time = req.arrival
-                view.state = ReqState.WAITING
-                view.context_len = 0
-                in_ppi[view.req_id] = req
-                self.ppi.add_request(view)
-
-            # ---- route PPI completions (steps 4-5; offloaded stay local) --
-            while self.ppi.completed_prefills:
-                t_done, view = self.ppi.completed_prefills.pop(0)
-                orig = in_ppi.pop(view.req_id)
-                orig.partial_len = view.context_len
-                orig.context_len = view.context_len
-                orig.kv_payload = view.kv_payload
-                orig.first_token = view.first_token
-                orig.ready_time = t_done
-                if orig.req_id in offloaded:
-                    orig.local_payload = True       # re-inject on the PPI
-                    self.ppi.add_request(orig)
-                else:
-                    self.cpi.add_request(orig)
-
-            # ---- advance the lagging runnable engine ---------------------
-            progressed = False
-            for eng in sorted((self.ppi, self.cpi), key=lambda e: e.clock):
-                if eng.runnable():
-                    eng.step()
-                    progressed = True
-                    break
-            if not progressed:
-                # engines idle: jump clocks to the next event
-                nexts = [t for t in (self.ppi.next_ready_time(),
-                                     self.cpi.next_ready_time()) if t is not None]
-                if arrivals:
-                    nexts.append(arrivals[0].arrival)
-                if not nexts:
-                    break  # deadlock guard (shouldn't happen)
-                t = min(nexts)
-                self.ppi.clock = max(self.ppi.clock, t)
-                self.cpi.clock = max(self.cpi.clock, t)
-
-        return aggregate([r.metrics for r in self.cpi.finished])
+        from repro.cluster.router import RoundRobinRouter
+        from repro.cluster.runtime import ClusterRuntime
+        # Aggregates over BOTH engines: under decode_offload requests that
+        # complete on the PPI count too (they were silently dropped before).
+        return ClusterRuntime([self.endpoint()], RoundRobinRouter()).run(
+            requests, max_steps)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ class Request:
     output_len: int
     arrival: float = 0.0
     enc_emb: Optional[np.ndarray] = None  # whisper-style encoder inputs (stub)
+    session: Optional[str] = None         # conversation id (router affinity)
 
     # Cronus bookkeeping
     partial_len: int = 0                  # tokens prefilled by the PPI

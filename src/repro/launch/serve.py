@@ -1,9 +1,17 @@
-"""Serving launcher: run Cronus (or a baseline) on a trace.
+"""Serving launcher: run Cronus (or a baseline) on a trace — on a single
+high/low pair (``--approach``) or on a whole heterogeneous cluster
+(``--cluster``).
 
 Examples:
   # paper-scale scheduling/timing run (null executor, simulated clocks):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --approach cronus --hi A100 --lo A10 --n-requests 1000
+
+  # multi-instance cluster: two Cronus pairs + four A10 workers behind a
+  # least-loaded router:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+      --cluster "2xcronus:A100+A10,4xworker:A10" --router least_loaded \
+      --n-requests 2000
 
   # functional run with real JAX execution on reduced config:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
@@ -16,6 +24,8 @@ import json
 
 import jax
 
+from repro.cluster import build_cluster
+from repro.cluster.router import ROUTERS
 from repro.configs import get_config
 from repro.core.executor import NullExecutor, RealExecutor
 from repro.models import build_model
@@ -30,6 +40,14 @@ def main():
     ap.add_argument("--approach", default="cronus", choices=APPROACHES)
     ap.add_argument("--hi", default="A100", choices=sorted(DEVICES))
     ap.add_argument("--lo", default="A10", choices=sorted(DEVICES))
+    ap.add_argument("--cluster", default=None,
+                    help="cluster spec, e.g. '2xcronus:A100+A10,4xworker:A10'"
+                         " (overrides --approach/--hi/--lo)")
+    ap.add_argument("--router", default="least_loaded",
+                    choices=sorted(ROUTERS), help="cluster request router")
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="tag requests with this many conversation ids "
+                         "(session-affinity routing)")
     ap.add_argument("--n-requests", type=int, default=1000)
     ap.add_argument("--interval", type=float, default=0.0,
                     help="arrival interval (s); 0 = all at t0 (max tput)")
@@ -45,7 +63,8 @@ def main():
 
     cfg = get_config(args.arch, smoke=args.smoke)
     reqs = make_trace(args.n_requests, seed=args.seed, interval=args.interval,
-                      vocab_size=cfg.vocab_size, scale=args.scale)
+                      vocab_size=cfg.vocab_size, scale=args.scale,
+                      sessions=args.sessions or None)
 
     if args.real:
         model = build_model(cfg, exact_moe=True)
@@ -60,8 +79,11 @@ def main():
     else:
         ex_kw = dict(executor_factory=lambda role: NullExecutor())
 
-    system = build_system(args.approach, cfg, DEVICES[args.hi],
-                          DEVICES[args.lo], **ex_kw)
+    if args.cluster:
+        system = build_cluster(cfg, args.cluster, router=args.router, **ex_kw)
+    else:
+        system = build_system(args.approach, cfg, DEVICES[args.hi],
+                              DEVICES[args.lo], **ex_kw)
     metrics = system.run(reqs)
     print(json.dumps(metrics, indent=2))
     if args.out:

@@ -30,9 +30,12 @@ def make_trace(n_requests: int = 1000, *, seed: int = 0,
                mean_out: float = AZURE_CONV_MEAN_OUT,
                max_in: int = 8192, max_out: int = 1024,
                vocab_size: int = 32000,
-               scale: float = 1.0) -> List[Request]:
+               scale: float = 1.0,
+               sessions: Optional[int] = None) -> List[Request]:
     """interval=0 -> all requests at t=0 (max-throughput measurement).
-    ``scale`` shrinks lengths for CPU-scale functional runs."""
+    ``scale`` shrinks lengths for CPU-scale functional runs.
+    ``sessions`` tags requests with conversation ids drawn from that many
+    sessions (round-robin), for session-affinity routing experiments."""
     rng = np.random.default_rng(seed)
     ins = synth_lengths(n_requests, mean_in * scale, 1.0, rng,
                         max(int(4 * scale), 2), int(max_in * scale))
@@ -43,5 +46,7 @@ def make_trace(n_requests: int = 1000, *, seed: int = 0,
         prompt = rng.integers(0, vocab_size, ins[i]).astype(np.int32)
         reqs.append(Request(req_id=f"r{i}", prompt=prompt,
                             output_len=int(outs[i]),
-                            arrival=i * interval))
+                            arrival=i * interval,
+                            session=(f"s{i % sessions}" if sessions
+                                     else None)))
     return reqs

@@ -1,0 +1,93 @@
+"""Fallback for environments without ``hypothesis``.
+
+The property tests in this suite use a small, fixed subset of the
+hypothesis API (``given``/``settings`` plus the ``integers``,
+``sampled_from``, ``lists`` and ``tuples`` strategies). When hypothesis is
+installed the real library is used; otherwise this module provides a
+deterministic miniature replacement: each ``@given`` test runs
+``max_examples`` times over pseudo-random examples drawn from a RNG seeded
+by the test's qualified name, so failures reproduce across runs and
+machines. No shrinking, no database — just enough to keep the invariant
+tests executable everywhere.
+
+Usage in test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    """Deterministic stand-ins for ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def lists(elem: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
+    def deco(fn):
+        # plain zero-arg wrapper (not functools.wraps): pytest must see an
+        # argument-free signature, or it would try to inject the strategy
+        # parameters as fixtures
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 10)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                args = [s.example(rng) for s in arg_strats]
+                kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kw)
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"falsifying example (compat shim): args={args} "
+                        f"kwargs={kw}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -1,7 +1,11 @@
 """Property tests: paged-KV block allocator invariants under random
 alloc/extend/free sequences (no double allocation, no leaks, N_free exact)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in the CI image; see _hypothesis_compat
+    from _hypothesis_compat import given, settings, st
 
 from repro.kvcache import BlockAllocator
 

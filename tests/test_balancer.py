@@ -1,6 +1,10 @@
 """Balancer (Algorithm 1) unit + property tests."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in the CI image; see _hypothesis_compat
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.balancer import Balancer, CPIStats

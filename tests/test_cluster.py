@@ -1,0 +1,201 @@
+"""Cluster runtime + router + topology tests (NullExecutor, roofline time).
+
+Covers: router policy unit behaviour (least-loaded picks most free KV
+blocks; session affinity is sticky; weighted round-robin probes in pattern
+order), the 1-pair-cluster == CronusSystem exactness guarantee, mixed-kind
+end-to-end runs under every router, the topology DSL, and the
+decode-offload metrics regression (PPI-finished requests must be counted).
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterRuntime, LeastLoadedRouter,
+                           RoundRobinRouter, SessionAffinityRouter,
+                           WorkerEndpoint, build_cluster, parse_cluster_spec)
+from repro.cluster.router import make_router
+from repro.configs import get_config
+from repro.core.balancer import Balancer
+from repro.core.cronus import build_cronus
+from repro.core.engine import Engine, EngineConfig
+from repro.core.executor import NullExecutor
+from repro.core.predictor import profile_chunked, profile_prefill
+from repro.core.request import Request
+from repro.serving.hardware import A10, A100, DeviceModel
+from repro.serving.simulator import build_system
+from repro.serving.trace import make_trace
+
+CFG = get_config("llama3-8b")
+
+
+def _worker(name: str, num_kv_blocks: int = 1024,
+            queue_cap=None) -> WorkerEndpoint:
+    eng = Engine(name, CFG,
+                 EngineConfig(max_slots=8, num_kv_blocks=num_kv_blocks),
+                 DeviceModel(A10, CFG), NullExecutor())
+    return WorkerEndpoint(name, eng, queue_cap=queue_cap)
+
+
+def _req(rid: str, session=None, n: int = 8) -> Request:
+    return Request(req_id=rid, prompt=np.zeros(n, np.int32), output_len=4,
+                   session=session)
+
+
+# ---------------------------------------------------------------------------
+# router policies
+# ---------------------------------------------------------------------------
+
+def test_least_loaded_picks_most_free_kv_blocks():
+    small, big = _worker("small", num_kv_blocks=128), _worker("big", 4096)
+    router = LeastLoadedRouter()
+    assert router.select(_req("r0"), [small, big]) is big
+    assert router.select(_req("r0"), [big, small]) is big
+
+
+def test_least_loaded_prefers_shallow_queue_over_free_blocks():
+    deep, shallow = _worker("deep", 4096), _worker("shallow", 128)
+    deep.engine.add_request(_req("q0"))
+    assert LeastLoadedRouter().select(_req("r0"), [deep, shallow]) is shallow
+
+
+def test_session_affinity_is_sticky():
+    a, b = _worker("a", 4096), _worker("b", 1024)
+    router = SessionAffinityRouter()
+    first = router.select(_req("r0", session="s1"), [a, b])
+    assert first is a           # fallback least-loaded: most free blocks
+    # load the home endpoint heavily: a fresh request prefers b ...
+    for i in range(4):
+        a.engine.add_request(_req(f"q{i}"))
+    assert router.select(_req("r1", session="s2"), [a, b]) is b
+    # ... but the s1 session stays pinned to its home endpoint
+    assert router.select(_req("r2", session="s1"), [a, b]) is a
+
+
+def test_session_affinity_waits_for_full_home_endpoint():
+    a, b = _worker("a", 4096, queue_cap=1), _worker("b", 1024, queue_cap=8)
+    router = SessionAffinityRouter()
+    assert router.select(_req("r0", session="s1"), [a, b]) is a
+    a.engine.add_request(_req("q0"))     # fill a's queue to its cap
+    # sticky sessions wait rather than migrate (KV locality)...
+    assert router.select(_req("r1", session="s1"), [a, b]) is None
+    # ...while other traffic is free to go to b
+    assert router.select(_req("r2", session="s9"), [a, b]) is b
+
+
+def test_weighted_round_robin_pattern_and_skip():
+    a, b = _worker("a", queue_cap=8), _worker("b", queue_cap=8)
+    router = RoundRobinRouter(weights=[2, 1])
+    picks = [router.select(_req(f"r{i}"), [a, b]).name for i in range(6)]
+    assert picks == ["a", "a", "b", "a", "a", "b"]
+    # a full endpoint is skipped; a fully-blocked cluster returns None
+    full = _worker("full", queue_cap=0)
+    open_ = _worker("open", queue_cap=2)
+    router = RoundRobinRouter()
+    assert router.select(_req("r0"), [full, open_]) is open_
+    assert RoundRobinRouter().select(_req("r1"), [full]) is None
+
+
+def test_session_lookahead_avoids_convoying():
+    """A sticky head pinned to a full home endpoint must not block the
+    unrelated traffic queued behind it: the runtime's bounded lookahead
+    (opted into by SessionAffinityRouter) places it elsewhere."""
+    from collections import deque
+    a, b = _worker("a", 4096, queue_cap=1), _worker("b", 1024, queue_cap=8)
+    router = SessionAffinityRouter()
+    rt = ClusterRuntime([a, b], router)
+    assert router.select(_req("r0", session="s1"), [a, b]) is a
+    a.engine.add_request(_req("q0"))          # home endpoint now full
+    pending = deque([_req("r1", session="s1"), _req("r2"), _req("r3")])
+    rt._dispatch(pending)
+    # r1 stays pinned (waiting), r2/r3 flowed to b past it
+    assert [r.req_id for r in pending] == ["r1"]
+    assert {r.req_id for r in b.engine.queue} == {"r2", "r3"}
+
+
+def test_make_router_registry():
+    assert isinstance(make_router("least_loaded"), LeastLoadedRouter)
+    with pytest.raises(KeyError):
+        make_router("nope")
+
+
+# ---------------------------------------------------------------------------
+# topology spec
+# ---------------------------------------------------------------------------
+
+def test_parse_cluster_spec():
+    spec = parse_cluster_spec("2xcronus:A100+A10, worker:A30,pp:A100+A10")
+    kinds = [(n.kind, n.devices, n.count) for n in spec.nodes]
+    assert kinds == [("cronus", ("A100", "A10"), 2),
+                     ("worker", ("A30",), 1),
+                     ("pp", ("A100", "A10"), 1)]
+    assert spec.n_engines == 2 * 2 + 1 + 1
+    for bad in ("", "cronus", "cronus:B200", "worker:A100+A10", "3cronus:A10"):
+        with pytest.raises(ValueError):
+            parse_cluster_spec(bad)
+
+
+# ---------------------------------------------------------------------------
+# cluster end-to-end
+# ---------------------------------------------------------------------------
+
+def test_one_pair_cluster_reproduces_cronus_exactly():
+    """A 1-pair cluster must produce byte-identical metrics to the
+    single-pair CronusSystem facade (same engines, same balancer, same
+    event loop) — the backbone of the refactor's no-regression claim."""
+    reqs = make_trace(80, seed=3, interval=0.05)
+    facade = build_system("cronus", CFG, A100, A10)
+    m_facade = facade.run([copy.deepcopy(r) for r in reqs])
+    cluster = build_cluster(CFG, "cronus:A100+A10", router="round_robin")
+    m_cluster = cluster.run([copy.deepcopy(r) for r in reqs])
+    assert m_facade == m_cluster
+
+
+@pytest.mark.parametrize("router", ["round_robin", "least_loaded", "session"])
+def test_mixed_cluster_completes_under_every_router(router):
+    reqs = make_trace(60, seed=4, interval=0.02, sessions=8)
+    system = build_cluster(CFG, "cronus:A100+A10,worker:A30,disagg_lh:A100+A10",
+                           router=router)
+    assert len(system.engines) == 5
+    m = system.run([copy.deepcopy(r) for r in reqs])
+    assert m["completed"] == len(reqs)
+    assert m["throughput"] > 0
+    # nothing lost, nothing duplicated across endpoints
+    done = [r.req_id for r in system.finished()]
+    assert sorted(done) == sorted(r.req_id for r in reqs)
+
+
+def test_multi_pair_scales_throughput():
+    reqs = make_trace(120, seed=5, interval=0.0)
+    one = build_cluster(CFG, "cronus:A100+A10").run(
+        [copy.deepcopy(r) for r in reqs])
+    three = build_cluster(CFG, "3xcronus:A100+A10").run(
+        [copy.deepcopy(r) for r in reqs])
+    assert three["completed"] == one["completed"] == len(reqs)
+    assert three["throughput"] > 1.25 * one["throughput"]
+    assert three["ttft_p99"] < one["ttft_p99"]
+
+
+# ---------------------------------------------------------------------------
+# decode-offload metrics regression
+# ---------------------------------------------------------------------------
+
+def test_offload_finishers_counted_in_metrics():
+    """Regression: CronusSystem.run used to aggregate only cpi.finished,
+    silently dropping every request that completed on the PPI under
+    decode_offload=True."""
+    hi, lo = DeviceModel(A100, CFG), DeviceModel(A10, CFG)
+    bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+    system = build_cronus(CFG, lo, hi,
+                          executor_factory=lambda role: NullExecutor(),
+                          balancer=bal, max_slots=64, decode_offload=True)
+    # tiny CPI pool -> Alg. 1 falls back -> bounded offload to the PPI
+    system.cpi.allocator = type(system.cpi.allocator)(num_blocks=200,
+                                                      block_size=16)
+    reqs = make_trace(40, seed=2, interval=0.0, mean_in=80, mean_out=200,
+                      max_in=256, max_out=512)
+    m = system.run([copy.deepcopy(r) for r in reqs])
+    assert len(system.ppi.finished) > 0          # offload actually fired
+    assert m["completed"] == len(reqs)           # ...and none were dropped
+    assert m["completed"] == (len(system.ppi.finished)
+                              + len(system.cpi.finished))

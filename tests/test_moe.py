@@ -52,6 +52,7 @@ def test_moe_permutation_equivariance(moe_setup):
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_shardmap_dispatch_subprocess():
     """shard_map expert-parallel dispatch (the HC1-2 optimization) matches
     the dense oracle on a real 2x2 mesh — run in a subprocess because the

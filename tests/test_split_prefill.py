@@ -5,7 +5,11 @@ states, hybrid, cross-attention)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in the CI image; see _hypothesis_compat
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.models import build_model

@@ -4,7 +4,11 @@ attention-free architectures)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in the CI image; see _hypothesis_compat
+    from _hypothesis_compat import given, settings, st
 
 from repro.models.ssm import ssd_chunked, ssd_ref
 

@@ -111,6 +111,7 @@ def test_dp_matches_oracle(setup):
         assert len(r.generated) == r.output_len
 
 
+@pytest.mark.slow
 def test_token_equivalence_subprocess():
     """THE correctness crown jewel: Cronus / Disagg / DP token streams ==
     monolithic oracle, bit-for-bit, in a clean process (see helper)."""
