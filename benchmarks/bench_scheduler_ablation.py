@@ -1,0 +1,115 @@
+"""Scheduler-policy ablation: policies x traces on throughput / TTFT P99 /
+TBT P99 / goodput / preemptions.
+
+Two rigs:
+  * ``worker`` — one A10 chunked-prefill+decode instance with its natural
+    HBM-derived KV pool. This isolates the batch-composition policy from
+    routing/balancing: fcfs reserves ``input+output`` blocks per request at
+    admission (the seed behaviour), so in decode-bound regimes its resident
+    batch is starved; sarathi/sjf admit on prompt-only reservations, grow
+    paged KV lazily and preempt-by-recompute on OOM.
+  * ``cronus`` — the full A100+A10 Balancer pair, showing how the policy
+    interacts with Algorithm 1 (whose admission gate reads the free-block
+    signal that lazy growth makes honest).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_scheduler_ablation
+[--quick] [--out BENCH_scheduler_ablation.json]``
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+from typing import Dict, List
+
+from benchmarks.common import DEFAULT_TBT_SLO, DEFAULT_TTFT_SLO, goodput
+from repro.cluster.router import RoundRobinRouter
+from repro.cluster.runtime import ClusterRuntime, WorkerEndpoint
+from repro.configs import get_config
+from repro.core.engine import Engine, EngineConfig
+from repro.core.executor import NullExecutor
+from repro.serving.hardware import A10, A100, DeviceModel
+from repro.serving.simulator import build_system
+from repro.serving.trace import make_trace
+
+POLICIES = ("fcfs", "sarathi", "sjf")
+
+
+def _traces(n: int) -> Dict[str, List]:
+    return {
+        # the paper's Azure-conversation shape, max-throughput mode
+        "azure_maxtput": make_trace(n, seed=0, interval=0.0),
+        # decode-bound regime (short in, long out): conservative
+        # reservation starves admission; lazy growth shines
+        "decode_heavy": make_trace(n, seed=2, mean_in=192, mean_out=640,
+                                   max_out=2048, interval=0.0),
+        # staggered arrivals near the paper's saturation point
+        "arrivals": make_trace(max(n // 2, 20), seed=1, interval=1 / 7.0),
+    }
+
+
+def _run_worker(cfg, policy: str, reqs) -> Dict[str, float]:
+    dev = DeviceModel(A10, cfg)
+    eng = Engine(f"w-{policy}", cfg,
+                 EngineConfig(max_batched_tokens=512, max_slots=256,
+                              block_size=16,
+                              num_kv_blocks=max(dev.kv_block_budget(16), 64),
+                              sched_policy=policy),
+                 dev, NullExecutor())
+    runtime = ClusterRuntime([WorkerEndpoint("w", eng, queue_cap=None)],
+                             RoundRobinRouter())
+    m = runtime.run(reqs)
+    m["goodput"] = goodput(reqs)
+    m["preemptions"] = eng.n_preemptions
+    return m
+
+
+def _run_cronus(cfg, policy: str, reqs) -> Dict[str, float]:
+    system = build_system("cronus", cfg, A100, A10, sched_policy=policy)
+    m = system.run(reqs)
+    m["goodput"] = goodput(reqs)
+    m["preemptions"] = sum(e.n_preemptions for e in (system.ppi, system.cpi))
+    return m
+
+
+def run(n_requests: int = 300, arch: str = "llama3-8b",
+        out_path: str = None) -> List[Dict]:
+    cfg = get_config(arch)
+    rows: List[Dict] = []
+    for trace_name, trace in _traces(n_requests).items():
+        for rig, runner in (("worker", _run_worker), ("cronus", _run_cronus)):
+            for policy in POLICIES:
+                reqs = [copy.deepcopy(r) for r in trace]
+                m = runner(cfg, policy, reqs)
+                row = {"rig": rig, "trace": trace_name, "policy": policy,
+                       "ttft_slo": DEFAULT_TTFT_SLO,
+                       "tbt_slo": DEFAULT_TBT_SLO, **m}
+                rows.append(row)
+                print(f"sched_ablation/{rig}/{trace_name}/{policy},0,"
+                      f"tput={m['throughput']:.3f} "
+                      f"ttft_p99={m['ttft_p99']:.3f} "
+                      f"tbt_p99={m['tbt_p99']:.4f} "
+                      f"goodput={m['goodput']:.3f} "
+                      f"preempt={m['preemptions']}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {out_path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller request counts (CI smoke)")
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--out", default=None,
+                    help="write rows as JSON (e.g. BENCH_scheduler_ablation.json)")
+    args = ap.parse_args()
+    n = args.n_requests or (80 if args.quick else 300)
+    run(n_requests=n, arch=args.arch, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,8 +5,17 @@ import time
 from typing import Callable, Dict, List
 
 from repro.configs import get_config
+from repro.core.metrics import slo_attainment
 from repro.serving.hardware import A10, A30, A100, DEVICES
 from repro.serving.trace import make_trace
+
+# Latency deadlines for goodput (SLO-attainment) reporting. Chosen from the
+# paper's Fig. 4 operating range on the Azure-conversation trace: a request
+# is "good" if its TTFT and its per-request P99 inter-token gap both land
+# under these. Scheduler ablations report goodput alongside raw throughput
+# so a policy can't win by starving the tail.
+DEFAULT_TTFT_SLO = 5.0    # seconds
+DEFAULT_TBT_SLO = 0.20    # seconds/token
 
 # the paper's evaluation grid (Table 2 / Fig. 4 columns)
 PAPER_GRID = [
@@ -43,3 +52,11 @@ def timed(name: str, fn: Callable):
 
 def emit_csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def goodput(requests, ttft_slo: float = DEFAULT_TTFT_SLO,
+            tbt_slo: float = DEFAULT_TBT_SLO) -> float:
+    """SLO attainment over a replayed trace: pass the ORIGINAL request list
+    (its metrics objects are shared with the engines), so requests the
+    system never finished count as misses."""
+    return slo_attainment([r.metrics for r in requests], ttft_slo, tbt_slo)

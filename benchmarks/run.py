@@ -20,7 +20,8 @@ def main() -> None:
     from benchmarks import (bench_balancer_ablation, bench_cluster_scaling,
                             bench_fig3_predictor_fit, bench_fig4_latency,
                             bench_kernels, bench_offload_limitation,
-                            bench_roofline, bench_table2_throughput,
+                            bench_roofline, bench_scheduler_ablation,
+                            bench_table2_throughput,
                             bench_table3_utilization)
 
     n2 = 250 if args.quick else 600
@@ -36,6 +37,9 @@ def main() -> None:
             n_requests=n4),
         "cluster_scaling": lambda: bench_cluster_scaling.run(
             n_requests=150 if args.quick else 300),
+        "scheduler_ablation": lambda: bench_scheduler_ablation.run(
+            n_requests=80 if args.quick else 300,
+            out_path="BENCH_scheduler_ablation.json"),
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }

@@ -18,6 +18,14 @@ PPI as local-payload decoders instead of crossing to the CPI.
 
 The disaggregated baselines are this same endpoint with a FixedBalancer
 (partial length pinned to L_in) and a decode-only CPI.
+
+The pair inherits its engines' batch-composition policy
+(``EngineConfig.sched_policy``, threaded through ``build_cronus`` /
+the topology DSL's ``@policy`` suffix): under a lazy policy the CPI
+reserves prompt-only KV and grows it per decode step, which makes the
+free-block count the Balancer pulls in step (1) reflect *actual* cache
+use instead of the conservative full-context reservation — Alg. 1's
+fallback (full prefill on the PPI) then fires only under real pressure.
 """
 from __future__ import annotations
 
@@ -45,6 +53,8 @@ class CronusPairEndpoint(Endpoint):
 
     @property
     def engines(self) -> Tuple[Engine, ...]:
+        # decode engine last: Endpoint.sched_policy / EndpointStats read
+        # the pair's policy and free-KV signal from the CPI
         return (self.ppi, self.cpi)
 
     # ------------------------------------------------------------------

@@ -75,6 +75,14 @@ class Endpoint(abc.ABC):
         """Completion count — hot path; override to avoid list copies."""
         return len(self.finished())
 
+    @property
+    def sched_policy(self) -> str:
+        """Batch-composition policy of the decode-side engine (pairs put
+        the decode engine last in ``engines``) — where dynamic-KV growth
+        and preemption happen, so it's the policy routers/operators care
+        about when endpoints differ."""
+        return self.engines[-1].ecfg.sched_policy
+
     def stats(self) -> EndpointStats:
         engines = self.engines
         queued = sum(len(e.queue) for e in engines) + sum(

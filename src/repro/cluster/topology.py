@@ -8,6 +8,11 @@ A spec is a list of :class:`NodeSpec` (or the compact string DSL):
         -> two Cronus PPI(A10)+CPI(A100) pairs and four standalone A10
            chunked-prefill workers behind one router.
 
+    "cronus:A100+A10@sarathi,2xworker:A10@sjf"
+        -> per-endpoint scheduling policies: the ``@policy`` suffix picks
+           the iteration-level batch-composition policy for that node's
+           engines (see ``repro.scheduling.SCHEDULERS``; default fcfs).
+
 Node kinds:
   * ``cronus:HI+LO``    — Balancer-split pair, prefill on LO, decode on HI
   * ``disagg_lh:HI+LO`` — full prefill on LO, decode-only HI
@@ -30,12 +35,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 from repro.cluster.router import Router, make_router
 from repro.cluster.runtime import ClusterRuntime, Endpoint, WorkerEndpoint
 from repro.core.engine import Engine, EngineConfig
+from repro.scheduling import SCHEDULERS
 from repro.serving.hardware import DEVICES, DeviceModel, DeviceSpec
 
 PAIR_KINDS = ("cronus", "disagg_lh", "disagg_hl")
 NODE_KINDS = PAIR_KINDS + ("worker", "pp")
 
-_NODE_RE = re.compile(r"^(?:(\d+)x)?([a-z_]+):([A-Za-z0-9+]+)$")
+_NODE_RE = re.compile(
+    r"^(?:(\d+)x)?([a-z_]+):([A-Za-z0-9+]+)(?:@([a-z_]+))?$")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +67,10 @@ class NodeSpec:
             if d not in DEVICES:
                 raise ValueError(f"unknown device {d!r}; "
                                  f"choose from {sorted(DEVICES)}")
+        policy = self.options.get("sched_policy")
+        if policy is not None and policy not in SCHEDULERS:
+            raise ValueError(f"unknown sched policy {policy!r}; "
+                             f"choose from {sorted(SCHEDULERS)}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,16 +85,18 @@ class ClusterSpec:
 
 
 def parse_cluster_spec(text: str, router: str = "least_loaded") -> ClusterSpec:
-    """Parse the compact DSL, e.g. ``"2xcronus:A100+A10,4xworker:A10"``."""
+    """Parse the compact DSL, e.g.
+    ``"2xcronus:A100+A10,4xworker:A10@sarathi"``."""
     nodes = []
     for part in filter(None, (p.strip() for p in text.split(","))):
         m = _NODE_RE.match(part)
         if m is None:
-            raise ValueError(f"bad node spec {part!r} "
-                             "(expected [<count>x]<kind>:<dev>[+<dev>])")
-        count, kind, devs = m.groups()
+            raise ValueError(f"bad node spec {part!r} (expected "
+                             "[<count>x]<kind>:<dev>[+<dev>][@<policy>])")
+        count, kind, devs, policy = m.groups()
+        options = {"sched_policy": policy} if policy else {}
         nodes.append(NodeSpec(kind=kind, devices=tuple(devs.split("+")),
-                              count=int(count or 1)))
+                              count=int(count or 1), options=options))
     if not nodes:
         raise ValueError(f"empty cluster spec {text!r}")
     return ClusterSpec(nodes=tuple(nodes), router=router)
@@ -121,12 +134,17 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                   executor_factory: Optional[Callable] = None,
                   max_slots: int = 256, block_size: int = 16,
                   max_batched_tokens: int = 512,
-                  worker_queue_cap: Optional[int] = 4) -> ClusterSystem:
+                  worker_queue_cap: Optional[int] = 4,
+                  sched_policy: str = "fcfs") -> ClusterSystem:
     """Materialise a :class:`ClusterSpec` into engines + endpoints.
 
     ``executor_factory(role)`` is called with ``"ppi"``/``"cpi"`` for pair
     engines and ``"worker"``/``"pp"`` for standalone ones (None -> real
     compute off, roofline timing only).
+
+    ``sched_policy`` is the cluster-wide default batch-composition policy;
+    a node's ``@policy`` DSL suffix (``options["sched_policy"]``)
+    overrides it per endpoint.
     """
     # imported lazily: core.cronus/baselines import the cluster runtime
     from repro.core.balancer import Balancer
@@ -142,6 +160,7 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
 
     endpoints: List[Endpoint] = []
     for node in spec.nodes:
+        policy = node.options.get("sched_policy", sched_policy)
         for i in range(node.count):
             name = f"{node.kind}{len(endpoints)}"
             if node.kind in PAIR_KINDS:
@@ -150,13 +169,15 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                 if node.kind == "cronus":
                     bal = Balancer(profile_prefill(lo), profile_chunked(hi))
                     system = build_cronus(
-                        cfg, lo, hi, balancer=bal,
+                        cfg, lo, hi, balancer=bal, sched_policy=policy,
                         decode_offload=node.options.get("decode_offload",
                                                         False), **kw)
                 elif node.kind == "disagg_lh":
-                    system = build_disaggregated(cfg, lo, hi, **kw)
+                    system = build_disaggregated(cfg, lo, hi,
+                                                 sched_policy=policy, **kw)
                 else:                                   # disagg_hl
-                    system = build_disaggregated(cfg, hi, lo, **kw)
+                    system = build_disaggregated(cfg, hi, lo,
+                                                 sched_policy=policy, **kw)
                 endpoints.append(system.endpoint(name))
             elif node.kind == "pp":
                 hi_spec, lo_spec = (DEVICES[d] for d in node.devices)
@@ -166,7 +187,8 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                                  max_batched_tokens=max_batched_tokens,
                                  max_slots=max_slots, block_size=block_size,
                                  num_kv_blocks=max(
-                                     device.kv_block_budget(block_size), 64)),
+                                     device.kv_block_budget(block_size), 64),
+                                 sched_policy=policy),
                              device, executor_factory("pp"))
                 endpoints.append(WorkerEndpoint(name, eng, queue_cap=None))
             else:                                        # worker
@@ -177,7 +199,8 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                                      "max_batched_tokens", max_batched_tokens),
                                  max_slots=max_slots, block_size=block_size,
                                  num_kv_blocks=max(
-                                     dev.kv_block_budget(block_size), 64)),
+                                     dev.kv_block_budget(block_size), 64),
+                                 sched_policy=policy),
                              dev, executor_factory("worker"))
                 endpoints.append(WorkerEndpoint(
                     name, eng,

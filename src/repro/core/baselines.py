@@ -46,16 +46,18 @@ class DPSystem:
 
 def build_dp(cfg, hi_device: DeviceModel, lo_device: DeviceModel, *,
              executor_factory: Callable, max_slots: int = 64,
-             block_size: int = 16) -> DPSystem:
+             block_size: int = 16, sched_policy: str = "fcfs") -> DPSystem:
     hi = Engine("dp-hi", cfg,
                 EngineConfig(max_batched_tokens=512, max_slots=max_slots,
                              block_size=block_size,
-                             num_kv_blocks=max(hi_device.kv_block_budget(block_size), 64)),
+                             num_kv_blocks=max(hi_device.kv_block_budget(block_size), 64),
+                             sched_policy=sched_policy),
                 hi_device, executor_factory("hi"))
     lo = Engine("dp-lo", cfg,
                 EngineConfig(max_batched_tokens=256, max_slots=max_slots,
                              block_size=block_size,
-                             num_kv_blocks=max(lo_device.kv_block_budget(block_size), 64)),
+                             num_kv_blocks=max(lo_device.kv_block_budget(block_size), 64),
+                             sched_policy=sched_policy),
                 lo_device, executor_factory("lo"))
     return DPSystem(engines=[hi, lo], weights=[3, 1], queue_caps=[3, 1])
 
@@ -137,11 +139,12 @@ class PPSystem:
 
 def build_pp(cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec, *,
              executor_factory: Callable, max_slots: int = 64,
-             block_size: int = 16) -> PPSystem:
+             block_size: int = 16, sched_policy: str = "fcfs") -> PPSystem:
     device = PipelineDeviceModel(hi_spec, lo_spec, cfg)
     eng = Engine("pp", cfg,
                  EngineConfig(max_batched_tokens=512, max_slots=max_slots,
                               block_size=block_size,
-                              num_kv_blocks=max(device.kv_block_budget(block_size), 64)),
+                              num_kv_blocks=max(device.kv_block_budget(block_size), 64),
+                              sched_policy=sched_policy),
                  device, executor_factory("pp"))
     return PPSystem(engine=eng)

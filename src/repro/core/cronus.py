@@ -96,21 +96,28 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
                  max_batched_tokens: int = 512,
                  max_slots: int = 64, block_size: int = 16,
                  decode_only_cpi: bool = False,
-                 decode_offload: bool = False) -> CronusSystem:
-    """executor_factory(role: str) -> executor ('ppi' | 'cpi')."""
+                 decode_offload: bool = False,
+                 sched_policy: str = "fcfs") -> CronusSystem:
+    """executor_factory(role: str) -> executor ('ppi' | 'cpi').
+
+    ``sched_policy`` selects the iteration-level batch-composition policy
+    (``repro.scheduling.SCHEDULERS``) for BOTH engines of the pair; the
+    default ``fcfs`` reproduces the seed engine bit-for-bit."""
     ppi_blocks = max(ppi_device.kv_block_budget(block_size), 64)
     cpi_blocks = max(cpi_device.kv_block_budget(block_size), 64)
     ppi = Engine("ppi", cfg,
                  EngineConfig(max_batched_tokens=max_batched_tokens,
                               max_slots=max_slots if decode_offload else 2,
                               block_size=block_size,
-                              num_kv_blocks=ppi_blocks, prefill_only=True),
+                              num_kv_blocks=ppi_blocks, prefill_only=True,
+                              sched_policy=sched_policy),
                  ppi_device, executor_factory("ppi"))
     cpi = Engine("cpi", cfg,
                  EngineConfig(max_batched_tokens=max_batched_tokens,
                               max_slots=max_slots, block_size=block_size,
                               num_kv_blocks=cpi_blocks,
-                              decode_only=decode_only_cpi),
+                              decode_only=decode_only_cpi,
+                              sched_policy=sched_policy),
                  cpi_device, executor_factory("cpi"))
     return CronusSystem(ppi=ppi, cpi=cpi,
                         balancer=balancer if balancer is not None

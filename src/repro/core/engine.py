@@ -1,11 +1,16 @@
 """Continuous-batching inference engine with chunked prefill (vLLM-class).
 
 One ``Engine`` models one serving instance (one device or pod slice). Each
-``step()`` executes a single iteration: all RUNNING requests decode one
-token, and (if token budget remains) the head PREFILL request advances by a
-chunk — the Sarathi/vLLM piggybacking the paper builds on. Iteration
-duration comes from the device's roofline model (simulated time); compute
-correctness comes from the pluggable executor (real JAX or null).
+``step()`` executes a single iteration. Batch composition is no longer the
+engine's business: a pluggable :class:`~repro.scheduling.Scheduler` policy
+(``EngineConfig.sched_policy``) turns the current slots/queue/allocator
+state into an :class:`~repro.scheduling.IterationPlan` — which queued
+requests to admit, which residents to preempt (recompute), which requests
+decode, and which prefill chunks (possibly several requests packed into the
+token budget) run. The engine applies the plan: it moves requests, grows
+paged-KV allocations lazily via ``BlockAllocator.extend_to`` when the
+policy schedules lazily, executes compute through the pluggable executor
+(real JAX or null), and charges roofline time for the composed batch.
 
 The engine doubles as:
   * the CPI (chunked prefill instance) of Cronus — requests arrive with
@@ -18,11 +23,14 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
 
 from repro.core.balancer import CPIStats
 from repro.core.request import ReqState, Request
 from repro.kvcache import BlockAllocator
+from repro.scheduling import IterationPlan, SchedulerView, make_scheduler
 
 
 @dataclasses.dataclass
@@ -33,6 +41,9 @@ class EngineConfig:
     num_kv_blocks: int = 4096          # KV pool size (from device HBM budget)
     prefill_only: bool = False         # disaggregated prefill instance
     decode_only: bool = False          # disaggregated decode instance
+    sched_policy: str = "fcfs"         # see repro.scheduling.SCHEDULERS
+    skip_ahead: Optional[bool] = None  # None -> policy default (fcfs: off)
+    lazy_kv: Optional[bool] = None     # None -> policy default (fcfs: off)
 
 
 class Engine:
@@ -46,10 +57,12 @@ class Engine:
         self.clock = 0.0
         self.allocator = BlockAllocator(engine_cfg.num_kv_blocks,
                                         engine_cfg.block_size)
+        self.scheduler = make_scheduler(engine_cfg.sched_policy, engine_cfg)
         self.slots: List[Optional[Request]] = [None] * engine_cfg.max_slots
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.completed_prefills: List = []   # (time, req) from prefill-only role
+        self.n_preemptions = 0               # recompute preemptions served
 
     # ------------------------------------------------------------------
     # admission
@@ -60,44 +73,96 @@ class Engine:
         req.state = ReqState.WAITING
         self.queue.append(req)
 
+    def _view(self) -> SchedulerView:
+        return SchedulerView(clock=self.clock, slots=self.slots,
+                             queue=self.queue, allocator=self.allocator,
+                             cfg=self.ecfg)
+
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slots):
             if r is None:
                 return i
         return None
 
-    def _admit(self):
-        while self.queue:
-            req = self.queue[0]
-            if req.ready_time > self.clock:
-                return  # FCFS: head not yet ready (in transit from the PPI)
-            slot = self._free_slot()
-            if slot is None:
-                return
-            # conservative: reserve blocks for the full final context
-            need = req.input_len + req.output_len
-            if not self.allocator.can_allocate(need):
-                return
-            self.queue.popleft()
-            self.allocator.allocate(req.req_id, need)
-            req.slot = slot
-            self.slots[slot] = req
-            self.executor.reset_slot(slot)
-            if req.kv_payload is not None:
-                req.state = ReqState.TRANSFER       # ingest during next iter
-            elif req.context_len >= req.input_len:
-                req.state = ReqState.RUNNING         # pre-prefilled elsewhere
-            else:
-                req.state = ReqState.PREFILL
+    def _place(self, req: Request):
+        """Queue -> slot, per the plan (blocks reserved per the policy:
+        full final context for conservative policies, prompt-only for lazy
+        ones, which then grow via ``extend_to``)."""
+        slot = self._free_slot()
+        assert slot is not None, "plan admitted with no free slot"
+        self.allocator.allocate(req.req_id,
+                                self.scheduler.admission_tokens(req))
+        req.slot = slot
+        self.slots[slot] = req
+        self.executor.reset_slot(slot)
+        if req.kv_payload is not None:
+            req.state = ReqState.TRANSFER        # ingest during next iter
+        elif req.context_len >= req.input_len:
+            req.state = ReqState.RUNNING          # pre-prefilled elsewhere
+        else:
+            req.state = ReqState.PREFILL
+
+    def _preempt(self, req: Request):
+        """Preemption-by-recompute (vLLM-style): release the slot and all
+        KV blocks, fold the generated tokens into the prompt (so the
+        re-prefill reproduces the full context and the next completion
+        token continues the sequence), and requeue at the front."""
+        self.n_preemptions += 1
+        req.preempted = True
+        if req.generated:
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(req.generated, np.int32)])
+            req.output_len -= len(req.generated)
+            req.generated = []
+        req.context_len = 0
+        req.kv_payload = None
+        self.allocator.free(req.req_id)
+        self.executor.reset_slot(req.slot)
+        self.slots[req.slot] = None
+        req.slot = None
+        req.state = ReqState.WAITING
+        req.ready_time = self.clock
+        self.queue.appendleft(req)
+
+    def _apply(self, plan: IterationPlan):
+        for r in plan.preempt:
+            self._preempt(r)
+        if plan.admit:
+            admit_ids = {id(r) for r in plan.admit}
+            self.queue = deque(r for r in self.queue
+                               if id(r) not in admit_ids)
+            for req in plan.admit:
+                self._place(req)
 
     # ------------------------------------------------------------------
     # stats for the Balancer (paper step (1))
     # ------------------------------------------------------------------
     def stats(self) -> CPIStats:
-        running = [r for r in self.slots if r and r.state == ReqState.RUNNING]
+        # Imminent decode load the Balancer must see, or it under-splits
+        # right after a handoff: besides RUNNING residents this counts
+        # TRANSFER residents whose context already covers the prompt —
+        # they ingest and decode this very iteration.
+        decoding = [r for r in self.slots if r and (
+            r.state == ReqState.RUNNING
+            or (r.state == ReqState.TRANSFER
+                and r.context_len >= r.input_len))]
+        imminent = []
+        if self.scheduler.lazy_kv:
+            # Honest-accounting mode (lazy policies only): delivered
+            # handoffs still queued — ready, fully prefilled — decode as
+            # soon as a slot frees, so count them up to the free-slot
+            # capacity. Conservative policies keep the seed's exact
+            # signal: the fcfs bit-identity contract covers the Balancer's
+            # inputs, and its split decisions are calibrated to them.
+            cap = sum(1 for s in self.slots if s is None)
+            if cap:
+                imminent = [r for r in self.queue
+                            if r.ready_time <= self.clock
+                            and r.context_len >= r.input_len][:cap]
         return CPIStats(
-            n_decode=len(running),
-            decode_ctx_sum=float(sum(r.total_ctx for r in running)),
+            n_decode=len(decoding) + len(imminent),
+            decode_ctx_sum=float(sum(r.total_ctx for r in decoding)
+                                 + sum(r.total_ctx for r in imminent)),
             free_kv_blocks=self.allocator.num_free,
             block_size=self.ecfg.block_size,
             max_batched_tokens=self.ecfg.max_batched_tokens,
@@ -114,23 +179,22 @@ class Engine:
         if any(r is not None for r in self.slots):
             return True
         if self.queue and self._free_slot() is not None:
-            req = self.queue[0]
-            return (req.ready_time <= self.clock
-                    and self.allocator.can_allocate(req.input_len + req.output_len))
+            return self.scheduler.has_admissible(self._view())
         return False
 
     def next_ready_time(self) -> Optional[float]:
-        """If idle but the queue head is in transit, when it becomes ready."""
+        """If idle but queued work is in transit, when it becomes ready."""
         if any(r is not None for r in self.slots) or not self.queue:
             return None
-        return self.queue[0].ready_time
+        return self.scheduler.next_ready_time(self._view())
 
     # ------------------------------------------------------------------
     # one iteration
     # ------------------------------------------------------------------
     def step(self) -> float:
         """Execute one iteration; returns its simulated duration (s)."""
-        self._admit()
+        plan = self.scheduler.plan(self._view())
+        self._apply(plan)
 
         # --- ingest pending KV transfers (overlapped with compute) -------
         transfer_time = 0.0
@@ -150,39 +214,48 @@ class Engine:
                     r.generated.append(r.first_token)
                     ttft_at_ingest.append(r)
 
-        decode_reqs = [r for r in self.slots
-                       if r and r.state == ReqState.RUNNING]
-        budget = self.ecfg.max_batched_tokens - len(decode_reqs)
+        # a handoff whose ingest completed its whole output (output_len
+        # fully produced elsewhere, e.g. 1-token outputs) must not decode
+        # again — it finishes in the ttft_at_ingest handling below
+        decode_reqs = [r for r in plan.decode if not r.done]
+        if self.scheduler.lazy_kv:
+            # dynamic paged-KV growth: each decoder's allocation must cover
+            # its next token (the planner preempted victims so this fits)
+            for r in decode_reqs:
+                self.allocator.extend_to(r.req_id, r.total_ctx)
 
-        # --- pick prefill chunk (head PREFILL request) --------------------
-        chunk_req, chunk_len = None, 0
-        if not self.ecfg.decode_only:
-            for r in self.slots:
-                if r and r.state == ReqState.PREFILL:
-                    chunk_req = r
-                    break
-            if chunk_req is not None:
-                # prefill-only instances have no decodes, so their budget is
-                # the full token batch — they too proceed chunk by chunk
-                chunk_len = min(chunk_req.prefill_remaining, max(budget, 0))
-                if chunk_len == 0:
-                    chunk_req = None
-
-        if chunk_req is None and not decode_reqs:
-            # idle iteration (only transfers) — charge transfer time if any
+        if not plan.prefill and not decode_reqs:
+            # idle iteration (only transfers); ingest-completed requests
+            # still pay the transfer before finishing (TTFT fairness rule)
+            if ttft_at_ingest:
+                self.clock += transfer_time
+                for r in ttft_at_ingest:
+                    r.metrics.first_token_time = self.clock
+                    r.metrics.finish_time = self.clock
+                    self._finish(r)
             return transfer_time
 
-        # --- execute ------------------------------------------------------
-        prefill_ctx = chunk_req.context_len if chunk_req else 0
-        if chunk_req is not None:
-            tokens = chunk_req.prompt[
-                chunk_req.context_len: chunk_req.context_len + chunk_len]
-            completes = (chunk_req.context_len + chunk_len
-                         >= chunk_req.input_len)
+        # --- execute prefill chunks (possibly several requests) -----------
+        prefill_tokens = plan.n_prefill_tokens
+        if len(plan.prefill) == 1:
+            prefill_ctx: float = plan.prefill[0].req.context_len
+        elif plan.prefill:
+            # token-weighted mean context start for the roofline attn term
+            prefill_ctx = sum(c.chunk_len * c.req.context_len
+                              for c in plan.prefill) / prefill_tokens
+        else:
+            prefill_ctx = 0
+        first_tokens: Dict[str, Optional[int]] = {}
+        for c in plan.prefill:
+            r = c.req
+            tokens = r.prompt[r.context_len: r.context_len + c.chunk_len]
+            completes = r.context_len + c.chunk_len >= r.input_len
             first = self.executor.prefill_chunk(
-                chunk_req.slot, tokens, chunk_req.context_len, completes,
-                enc_emb=chunk_req.enc_emb if chunk_req.context_len == 0 else None)
-            chunk_req.context_len += chunk_len
+                r.slot, tokens, r.context_len, completes,
+                enc_emb=r.enc_emb if r.context_len == 0 else None)
+            r.context_len += c.chunk_len
+            if completes:
+                first_tokens[r.req_id] = first
 
         if decode_reqs:
             slot_tokens, slot_lens = {}, {}
@@ -196,7 +269,7 @@ class Engine:
         # --- timing -------------------------------------------------------
         decode_ctx_sum = float(sum(r.total_ctx for r in decode_reqs))
         duration = self.device.chunked_iter_time(
-            chunk_len, prefill_ctx, decode_ctx_sum, len(decode_reqs))
+            prefill_tokens, prefill_ctx, decode_ctx_sum, len(decode_reqs))
         duration = max(duration, transfer_time)
         self.clock += duration
         for r in ttft_at_ingest:
@@ -206,20 +279,41 @@ class Engine:
                 self._finish(r)
 
         # --- bookkeeping ----------------------------------------------------
-        if chunk_req is not None and chunk_req.context_len >= chunk_req.input_len:
-            if self.ecfg.prefill_only:
-                chunk_req.first_token = first
-                chunk_req.metrics.first_token_time = self.clock
-                self._complete_prefill_instance(chunk_req)
+        for c in plan.prefill:
+            r = c.req
+            if r.context_len < r.input_len:
+                continue
+            first = first_tokens[r.req_id]
+            # output_len == 0 <=> a PPI prefill view; an offloaded decoder
+            # recomputing after preemption carries output_len > 0 and must
+            # take the normal token-emitting path even on a prefill-only
+            # instance
+            if self.ecfg.prefill_only and r.output_len == 0:
+                r.first_token = first
+                r.metrics.first_token_time = self.clock
+                self._complete_prefill_instance(r)
             else:
-                chunk_req.first_token = first
-                chunk_req.generated.append(first)   # first output token
-                chunk_req.metrics.first_token_time = self.clock
-                if chunk_req.done:
-                    chunk_req.metrics.finish_time = self.clock
-                    self._finish(chunk_req)
+                r.first_token = first
+                r.generated.append(first)   # first output token
+                if r.preempted and r.input_len > r.metrics.input_len:
+                    # recompute after a preemption that folded delivered
+                    # tokens into the prompt (input_len grew past the
+                    # original): TTFT already happened for real, this
+                    # completion token is an inter-token interval
+                    r.metrics.token_times.append(self.clock)
                 else:
-                    chunk_req.state = ReqState.RUNNING
+                    # TTFT is this completion — overwriting a PPI-side
+                    # timestamp for Cronus partial prefills (views share
+                    # the metrics object), as the seed did; a request
+                    # preempted mid-prefill before emitting any token
+                    # lands here too, so a stale PPI timestamp can never
+                    # masquerade as a delivered TTFT
+                    r.metrics.first_token_time = self.clock
+                if r.done:
+                    r.metrics.finish_time = self.clock
+                    self._finish(r)
+                else:
+                    r.state = ReqState.RUNNING
 
         if decode_reqs:
             for r in decode_reqs:

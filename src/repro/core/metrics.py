@@ -1,4 +1,5 @@
-"""Serving QoE metrics: throughput, TTFT P99, TBT P99 (paper §2, §5)."""
+"""Serving QoE metrics: throughput, TTFT P99, TBT P99 (paper §2, §5),
+plus SLO attainment (goodput) for scheduler ablations."""
 from __future__ import annotations
 
 import dataclasses
@@ -33,16 +34,48 @@ def percentile(values, p: float) -> float:
     return float(np.percentile(np.asarray(values), p))
 
 
-def aggregate(reqs: List[RequestMetrics]) -> Dict[str, float]:
+def meets_slo(r: RequestMetrics, ttft_slo: float, tbt_slo: float,
+              tbt_pct: float = 99.0) -> bool:
+    """Did one completed request hit both latency deadlines? TTFT against
+    ``ttft_slo``; the per-request P``tbt_pct`` inter-token gap against
+    ``tbt_slo`` (a single straggler token shouldn't fail a request whose
+    stream was otherwise smooth)."""
+    if r.finish_time is None or r.first_token_time is None:
+        return False
+    if r.ttft > ttft_slo:
+        return False
+    tbts = r.tbts
+    return not tbts or percentile(tbts, tbt_pct) <= tbt_slo
+
+
+def slo_attainment(reqs: List[RequestMetrics], ttft_slo: float,
+                   tbt_slo: float, tbt_pct: float = 99.0) -> float:
+    """Goodput: fraction of ALL submitted requests that completed within
+    both deadlines (incomplete requests count as misses)."""
+    if not reqs:
+        return float("nan")
+    ok = sum(1 for r in reqs if meets_slo(r, ttft_slo, tbt_slo, tbt_pct))
+    return ok / len(reqs)
+
+
+def aggregate(reqs: List[RequestMetrics],
+              ttft_slo: Optional[float] = None,
+              tbt_slo: Optional[float] = None) -> Dict[str, float]:
+    """Fleet QoE summary. Passing both SLOs adds a ``goodput`` key (the
+    default call returns exactly the seed's dict, so existing run metrics
+    stay bit-identical)."""
     done = [r for r in reqs if r.finish_time is not None]
     if not done:
-        return {"throughput": 0.0, "ttft_p99": float("nan"),
-                "tbt_p99": float("nan"), "completed": 0}
+        out = {"throughput": 0.0, "ttft_p99": float("nan"),
+               "tbt_p99": float("nan"), "completed": 0}
+        if ttft_slo is not None and tbt_slo is not None:
+            out["goodput"] = 0.0 if reqs else float("nan")
+        return out
     t0 = min(r.arrival for r in done)
     t1 = max(r.finish_time for r in done)
     ttfts = [r.ttft for r in done if r.first_token_time is not None]
     tbts = [tbt for r in done for tbt in r.tbts]
-    return {
+    out = {
         "throughput": len(done) / max(t1 - t0, 1e-9),
         "ttft_p50": percentile(ttfts, 50),
         "ttft_p99": percentile(ttfts, 99),
@@ -51,3 +84,6 @@ def aggregate(reqs: List[RequestMetrics]) -> Dict[str, float]:
         "completed": len(done),
         "makespan": t1 - t0,
     }
+    if ttft_slo is not None and tbt_slo is not None:
+        out["goodput"] = slo_attainment(reqs, ttft_slo, tbt_slo)
+    return out

@@ -39,6 +39,7 @@ class Request:
     slot: Optional[int] = None
     context_len: int = 0                  # tokens resident in this engine's cache
     generated: List[int] = dataclasses.field(default_factory=list)
+    preempted: bool = False               # ever preempted (recompute pending/done)
     metrics: Optional[RequestMetrics] = None
 
     def __post_init__(self):

@@ -36,15 +36,26 @@ class BlockAllocator:
         self._owned.setdefault(req_id, []).extend(blocks)
         return blocks
 
-    def extend(self, req_id: str, old_tokens: int, new_tokens: int) -> List[int]:
-        """Grow a request's allocation from old_tokens to new_tokens."""
-        have = self.blocks_needed(old_tokens) if old_tokens else 0
-        need = self.blocks_needed(new_tokens)
-        extra = max(0, need - have)
+    def owned_blocks(self, req_id: str) -> int:
+        """Blocks currently held by a request (0 if unknown)."""
+        return len(self._owned.get(req_id, ()))
+
+    def can_extend_to(self, req_id: str, n_tokens: int) -> bool:
+        return (self.blocks_needed(n_tokens) - self.owned_blocks(req_id)
+                <= self.num_free)
+
+    def extend_to(self, req_id: str, n_tokens: int) -> List[int]:
+        """Grow a request's allocation until it covers ``n_tokens`` total
+        (no-op if it already does). This is the dynamic-growth entry point
+        the iteration scheduler uses as ``context_len`` advances."""
+        have = self.owned_blocks(req_id)
+        extra = max(0, self.blocks_needed(n_tokens) - have)
         if extra > self.num_free:
-            raise MemoryError(f"out of KV blocks: need {extra}, free {self.num_free}")
+            raise MemoryError(
+                f"out of KV blocks: need {extra}, free {self.num_free}")
         blocks = [self._free.pop() for _ in range(extra)]
-        self._owned.setdefault(req_id, []).extend(blocks)
+        if blocks:
+            self._owned.setdefault(req_id, []).extend(blocks)
         return blocks
 
     def free(self, req_id: str) -> None:

@@ -7,11 +7,17 @@ Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --approach cronus --hi A100 --lo A10 --n-requests 1000
 
-  # multi-instance cluster: two Cronus pairs + four A10 workers behind a
-  # least-loaded router:
+  # same pair under the sarathi multi-sequence chunk-packing scheduler
+  # (lazy paged-KV growth + preemption-by-recompute on OOM):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
-      --cluster "2xcronus:A100+A10,4xworker:A10" --router least_loaded \
-      --n-requests 2000
+      --approach cronus --sched-policy sarathi --n-requests 1000
+
+  # multi-instance cluster: two Cronus pairs + four A10 workers behind a
+  # least-loaded router; per-endpoint policies via the @policy suffix
+  # (workers run SJF, pairs keep the --sched-policy default):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+      --cluster "2xcronus:A100+A10,4xworker:A10@sjf" \
+      --router least_loaded --n-requests 2000
 
   # functional run with real JAX execution on reduced config:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
@@ -29,6 +35,7 @@ from repro.cluster.router import ROUTERS
 from repro.configs import get_config
 from repro.core.executor import NullExecutor, RealExecutor
 from repro.models import build_model
+from repro.scheduling import SCHEDULERS
 from repro.serving.hardware import DEVICES
 from repro.serving.simulator import APPROACHES, build_system
 from repro.serving.trace import make_trace
@@ -45,6 +52,12 @@ def main():
                          " (overrides --approach/--hi/--lo)")
     ap.add_argument("--router", default="least_loaded",
                     choices=sorted(ROUTERS), help="cluster request router")
+    ap.add_argument("--sched-policy", default="fcfs",
+                    choices=sorted(SCHEDULERS),
+                    help="iteration-level batch-composition policy "
+                         "(fcfs = seed-identical; sarathi/sjf pack multiple "
+                         "prefills, grow KV lazily and preempt on OOM); "
+                         "per-endpoint override via '@policy' in --cluster")
     ap.add_argument("--sessions", type=int, default=0,
                     help="tag requests with this many conversation ids "
                          "(session-affinity routing)")
@@ -80,10 +93,12 @@ def main():
         ex_kw = dict(executor_factory=lambda role: NullExecutor())
 
     if args.cluster:
-        system = build_cluster(cfg, args.cluster, router=args.router, **ex_kw)
+        system = build_cluster(cfg, args.cluster, router=args.router,
+                               sched_policy=args.sched_policy, **ex_kw)
     else:
         system = build_system(args.approach, cfg, DEVICES[args.hi],
-                              DEVICES[args.lo], **ex_kw)
+                              DEVICES[args.lo],
+                              sched_policy=args.sched_policy, **ex_kw)
     metrics = system.run(reqs)
     print(json.dumps(metrics, indent=2))
     if args.out:

@@ -28,12 +28,13 @@ def _null_factory(role: str):
 
 def build_system(approach: str, cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec,
                  *, max_slots: int = 256, block_size: int = 16,
-                 max_batched_tokens: int = 512, executor_factory=None):
+                 max_batched_tokens: int = 512, executor_factory=None,
+                 sched_policy: str = "fcfs"):
     executor_factory = executor_factory or _null_factory
     hi = DeviceModel(hi_spec, cfg)
     lo = DeviceModel(lo_spec, cfg)
     kw = dict(executor_factory=executor_factory, max_slots=max_slots,
-              block_size=block_size)
+              block_size=block_size, sched_policy=sched_policy)
     if approach == "cronus":
         bal = Balancer(profile_prefill(lo), profile_chunked(hi))
         return build_cronus(cfg, lo, hi, balancer=bal,

@@ -1,5 +1,7 @@
 """Property tests: paged-KV block allocator invariants under random
-alloc/extend/free sequences (no double allocation, no leaks, N_free exact)."""
+alloc/extend/free/preempt sequences (no double allocation, no leaks,
+N_free exact) — runs with real hypothesis or the deterministic
+``_hypothesis_compat`` shim when it is not installed."""
 import pytest
 
 try:
@@ -26,9 +28,8 @@ def test_allocator_invariants(ops):
                 live[rid] = tokens
         elif op == "extend" and rid in live:
             new_total = live[rid] + tokens
-            need = a.blocks_needed(new_total) - a.blocks_needed(live[rid])
-            if need <= a.num_free:
-                a.extend(rid, live[rid], new_total)
+            if a.can_extend_to(rid, new_total):
+                a.extend_to(rid, new_total)
                 live[rid] = new_total
         elif op == "free" and rid in live:
             a.free(rid)
@@ -36,6 +37,81 @@ def test_allocator_invariants(ops):
         a.check_invariants()
     used = sum(a.blocks_needed(t) for t in live.values())
     assert a.num_free == a.num_blocks - used
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend_to", "preempt",
+                                           "free"]),
+                          st.integers(0, 9), st.integers(1, 400)),
+                min_size=1, max_size=80))
+def test_allocator_preempt_roundtrips(ops):
+    """The scheduler's dynamic-growth lifecycle: lazy allocate ->
+    ``extend_to`` as context grows -> preempt (free all, re-admit later,
+    grow again). Invariants hold at every step and preemption returns
+    exactly the blocks the request held."""
+    a = BlockAllocator(num_blocks=128, block_size=16)
+    live = {}                       # req_id -> covered tokens
+    for op, rid_i, tokens in ops:
+        rid = f"r{rid_i}"
+        if op == "alloc" and rid not in live:
+            if a.can_allocate(tokens):
+                a.allocate(rid, tokens)
+                live[rid] = tokens
+        elif op == "extend_to" and rid in live:
+            target = max(live[rid], tokens)
+            if a.can_extend_to(rid, target):
+                a.extend_to(rid, target)
+                assert a.owned_blocks(rid) == a.blocks_needed(target)
+                live[rid] = target
+            else:
+                # preemption-by-recompute: release everything; a later
+                # alloc readmits from scratch
+                held = a.owned_blocks(rid)
+                free_before = a.num_free
+                a.free(rid)
+                del live[rid]
+                assert a.num_free == free_before + held
+        elif op == "preempt" and rid in live:
+            held = a.owned_blocks(rid)
+            free_before = a.num_free
+            a.free(rid)
+            assert a.num_free == free_before + held
+            # immediate re-admission at prompt size must fit again
+            readmit = min(tokens, 64)
+            if a.can_allocate(readmit):
+                a.allocate(rid, readmit)
+                live[rid] = readmit
+            else:
+                del live[rid]
+        elif op == "free" and rid in live:
+            a.free(rid)
+            del live[rid]
+        a.check_invariants()
+    used = sum(a.blocks_needed(t) for t in live.values())
+    assert a.num_free == a.num_blocks - used
+
+
+def test_extend_to_is_idempotent():
+    a = BlockAllocator(num_blocks=8, block_size=16)
+    a.allocate("r", 20)             # 2 blocks
+    assert a.extend_to("r", 20) == []
+    assert a.extend_to("r", 16) == []      # shrink requests are no-ops
+    assert len(a.extend_to("r", 40)) == 1  # 3 blocks total
+    assert a.owned_blocks("r") == 3
+    a.check_invariants()
+
+
+def test_extend_to_oom():
+    a = BlockAllocator(num_blocks=6, block_size=16)
+    a.allocate("r1", 48)
+    a.allocate("r2", 32)
+    assert not a.can_extend_to("r1", 80)
+    with pytest.raises(MemoryError):
+        a.extend_to("r1", 80)
+    a.free("r2")                    # the preemption path
+    assert a.can_extend_to("r1", 80)
+    a.extend_to("r1", 80)
+    a.check_invariants()
 
 
 def test_allocator_oom():

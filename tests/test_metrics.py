@@ -1,7 +1,9 @@
-"""Metrics aggregation: TTFT/TBT/throughput definitions (paper §2)."""
+"""Metrics aggregation: TTFT/TBT/throughput definitions (paper §2) and
+SLO-attainment (goodput) for scheduler ablations."""
 import math
 
-from repro.core.metrics import RequestMetrics, aggregate, percentile
+from repro.core.metrics import (RequestMetrics, aggregate, meets_slo,
+                                percentile, slo_attainment)
 
 
 def _req(rid, arrival, first, token_times, finish):
@@ -36,3 +38,29 @@ def test_percentile_edge_cases():
 def test_aggregate_empty():
     agg = aggregate([])
     assert agg["completed"] == 0 and agg["throughput"] == 0.0
+
+
+def test_meets_slo():
+    ok = _req("a", 0.0, 0.5, [0.6, 0.7], 0.7)          # ttft .5, tbts .1
+    slow_start = _req("b", 0.0, 3.0, [3.1], 3.1)       # ttft 3.0
+    choppy = _req("c", 0.0, 0.5, [2.5], 2.5)           # tbt 2.0
+    unfinished = _req("d", 0.0, 0.5, [], None)
+    assert meets_slo(ok, ttft_slo=1.0, tbt_slo=0.5)
+    assert not meets_slo(slow_start, ttft_slo=1.0, tbt_slo=0.5)
+    assert not meets_slo(choppy, ttft_slo=1.0, tbt_slo=0.5)
+    assert not meets_slo(unfinished, ttft_slo=1.0, tbt_slo=0.5)
+
+
+def test_slo_attainment_counts_unfinished_as_misses():
+    reqs = [_req("a", 0.0, 0.5, [0.6], 0.6),
+            _req("b", 0.0, 9.0, [9.1], 9.1),
+            _req("c", 0.0, None, [], None)]
+    assert math.isclose(slo_attainment(reqs, 1.0, 0.5), 1 / 3)
+    assert math.isnan(slo_attainment([], 1.0, 0.5))
+
+
+def test_aggregate_goodput_key_is_opt_in():
+    reqs = [_req("a", 0.0, 0.5, [0.6], 0.6)]
+    assert "goodput" not in aggregate(reqs)     # seed dict unchanged
+    agg = aggregate(reqs, ttft_slo=1.0, tbt_slo=0.5)
+    assert math.isclose(agg["goodput"], 1.0)

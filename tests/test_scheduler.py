@@ -1,0 +1,473 @@
+"""Iteration-level scheduler layer: policy semantics, skip-ahead admission,
+dynamic paged-KV growth, preemption-by-recompute, and the Balancer-facing
+stats fixes (all on NullExecutor — batch composition, not numerics)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import Engine, EngineConfig
+from repro.core.executor import NullExecutor
+from repro.core.request import ReqState, Request
+from repro.scheduling import SCHEDULERS, make_scheduler
+from repro.serving.hardware import A10, DeviceModel
+
+CFG = get_config("llama3-8b")
+DEV = DeviceModel(A10, CFG)
+
+
+def _req(rid, input_len, output_len, arrival=0.0, ready=0.0):
+    rng = np.random.default_rng(abs(hash(rid)) % 2**32)
+    r = Request(req_id=rid,
+                prompt=rng.integers(0, 100, input_len).astype(np.int32),
+                output_len=output_len, arrival=arrival)
+    r.ready_time = ready
+    return r
+
+
+def _engine(policy="fcfs", num_kv_blocks=4096, max_slots=8,
+            max_batched_tokens=64, block_size=16, **ecfg_kw):
+    return Engine(f"eng-{policy}", CFG,
+                  EngineConfig(max_batched_tokens=max_batched_tokens,
+                               max_slots=max_slots, block_size=block_size,
+                               num_kv_blocks=num_kv_blocks,
+                               sched_policy=policy, **ecfg_kw),
+                  DEV, NullExecutor())
+
+
+def _drain(eng, max_steps=100_000):
+    steps = 0
+    while (eng.runnable() or any(s is not None for s in eng.slots)) \
+            and steps < max_steps:
+        eng.step()
+        steps += 1
+    assert steps < max_steps, "engine did not drain"
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# policy plumbing
+# ---------------------------------------------------------------------------
+
+def test_registry_and_defaults():
+    cfg = EngineConfig()
+    for name in ("fcfs", "sarathi", "sjf", "priority"):
+        assert name in SCHEDULERS
+        make_scheduler(name, cfg)
+    with pytest.raises(KeyError):
+        make_scheduler("nope", cfg)
+    assert not make_scheduler("fcfs", cfg).lazy_kv
+    assert not make_scheduler("fcfs", cfg).skip_ahead
+    assert make_scheduler("sarathi", cfg).lazy_kv
+    assert make_scheduler("sarathi", cfg).skip_ahead
+    # explicit EngineConfig knobs override the policy defaults
+    assert make_scheduler("fcfs", EngineConfig(skip_ahead=True)).skip_ahead
+    assert not make_scheduler(
+        "sarathi", EngineConfig(lazy_kv=False)).lazy_kv
+
+
+def test_fcfs_conservative_reservation():
+    """fcfs (the seed policy) reserves input+output blocks at admission."""
+    eng = _engine("fcfs", num_kv_blocks=64, block_size=16)
+    eng.add_request(_req("a", 32, 16))
+    eng.step()
+    # ceil(48/16) = 3 blocks reserved although context is only 32 tokens
+    assert eng.allocator.owned_blocks("a") == 3
+    assert eng.n_preemptions == 0
+
+
+def test_lazy_reservation_and_growth():
+    """sarathi reserves the prompt only and extends as decode advances."""
+    eng = _engine("sarathi", num_kv_blocks=64, block_size=16)
+    eng.add_request(_req("a", 32, 40))
+    eng.step()                       # prefill completes (budget 64 >= 32)
+    assert eng.allocator.owned_blocks("a") == 3   # ceil(33/16), not ceil(72/16)
+    for _ in range(20):
+        eng.step()
+    # decode grew the allocation dynamically
+    assert eng.allocator.owned_blocks("a") > 3
+    eng.allocator.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# satellite: skip-ahead admission (head-of-line blocking fix)
+# ---------------------------------------------------------------------------
+
+def test_hol_blocking_default_fcfs():
+    """Seed semantics: a head still in transit blocks a ready follower."""
+    eng = _engine("fcfs")
+    eng.add_request(_req("head", 16, 2, ready=100.0))   # PPI->CPI transit
+    eng.add_request(_req("tail", 16, 2, ready=0.0))
+    assert not eng.runnable()
+    assert eng.next_ready_time() == 100.0
+
+
+def test_skip_ahead_admission():
+    """With skip_ahead, the ready follower passes the blocked head."""
+    eng = _engine("fcfs", skip_ahead=True)
+    eng.add_request(_req("head", 16, 2, ready=100.0))
+    eng.add_request(_req("tail", 16, 2, ready=0.0))
+    assert eng.runnable()
+    # the ready tail makes the engine runnable; only the in-transit head
+    # remains a *future* wake-up time
+    assert eng.next_ready_time() == 100.0
+    eng.step()
+    resident = [r.req_id for r in eng.slots if r]
+    assert resident == ["tail"]
+    assert eng.queue[0].req_id == "head"    # head keeps its turn
+
+
+def test_skip_ahead_default_on_for_new_policies():
+    eng = _engine("sarathi")
+    eng.add_request(_req("head", 16, 2, ready=100.0))
+    eng.add_request(_req("tail", 16, 2, ready=0.0))
+    assert eng.runnable()
+
+
+# ---------------------------------------------------------------------------
+# satellite: stats() counts imminent decode load (TRANSFER ingest)
+# ---------------------------------------------------------------------------
+
+def test_stats_counts_transfer_as_imminent_decode():
+    """A TRANSFER request whose context covers its prompt decodes this
+    very iteration — the Balancer must see it, or it under-splits right
+    after a handoff (regression: seed excluded them)."""
+    eng = _engine("fcfs")
+    r = _req("t", 32, 8)
+    r.context_len = 32                 # fully prefilled on the PPI
+    r.state = ReqState.TRANSFER
+    r.slot = 0
+    eng.slots[0] = r
+    s = eng.stats()
+    assert s.n_decode == 1
+    assert s.decode_ctx_sum == float(r.total_ctx)
+    # a TRANSFER still mid-prefill is imminent *prefill*, not decode
+    r2 = _req("p", 32, 8)
+    r2.context_len = 16
+    r2.state = ReqState.TRANSFER
+    r2.slot = 1
+    eng.slots[1] = r2
+    assert eng.stats().n_decode == 1
+
+
+def test_stats_counts_delivered_handoffs_in_queue():
+    """The live path of the same undercount: a PPI->CPI handoff delivered
+    into the queue (ready, fully prefilled) is admitted and decoding
+    within the next iteration — it is imminent decode load. Counted only
+    under lazy (honest-accounting) policies; fcfs keeps the seed's exact
+    Balancer signal (the bit-identity contract)."""
+    eng = _engine("sarathi")
+    eng.clock = 5.0
+    ready = _req("h", 32, 8, ready=4.0)
+    ready.context_len = 32             # full context arrived with it
+    eng.add_request(ready)
+    in_transit = _req("x", 32, 8, ready=9.0)
+    in_transit.context_len = 32        # same shape but not ready yet
+    eng.add_request(in_transit)
+    fresh = _req("f", 32, 8, ready=0.0)   # ready but needs local prefill
+    eng.add_request(fresh)
+    s = eng.stats()
+    assert s.n_decode == 1             # only the ready, prefilled handoff
+    assert s.decode_ctx_sum == float(ready.total_ctx)
+    # fcfs (seed signal, bit-identity contract) ignores the queue
+    eng_f = _engine("fcfs")
+    eng_f.clock = 5.0
+    r = _req("h2", 32, 8, ready=4.0)
+    r.context_len = 32
+    eng_f.add_request(r)
+    assert eng_f.stats().n_decode == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: multi-sequence chunk packing
+# ---------------------------------------------------------------------------
+
+def test_fcfs_single_prefill_per_iteration():
+    eng = _engine("fcfs", max_batched_tokens=64)
+    for i in range(3):
+        eng.add_request(_req(f"r{i}", 16, 2))
+    eng.step()
+    advanced = [r for r in eng.slots if r and r.context_len > 0]
+    assert len(advanced) == 1          # head chunk only, as the seed
+
+
+def test_sarathi_packs_multiple_prefills():
+    eng = _engine("sarathi", max_batched_tokens=64)
+    for i in range(3):
+        eng.add_request(_req(f"r{i}", 16, 2))
+    eng.step()
+    advanced = [r for r in eng.slots if r and r.context_len > 0]
+    assert len(advanced) == 3          # 3 x 16 tokens packed into B=64
+
+
+def test_sjf_orders_by_remaining_work():
+    eng = _engine("sjf", max_batched_tokens=32)
+    eng.add_request(_req("long", 128, 32))
+    eng.add_request(_req("short", 16, 2))
+    eng.step()
+    short = next(r for r in eng.slots if r and r.req_id == "short")
+    longr = next(r for r in eng.slots if r and r.req_id == "long")
+    # the short job claimed the budget first
+    assert short.context_len == 16
+    assert longr.context_len == 32 - 16
+
+
+# ---------------------------------------------------------------------------
+# tentpole: dynamic growth admits more + preemption-by-recompute
+# ---------------------------------------------------------------------------
+
+def test_lazy_growth_admits_more_concurrency():
+    """Acceptance: a long-output workload that refuses admission under
+    conservative reservation admits more concurrent requests lazily."""
+    # pool: 16 blocks = 256 tokens; each request needs 32+210=242 tokens
+    # conservatively (15 blocks) -> fcfs can only ever hold ONE resident
+    reqs = [(f"r{i}", 32, 210) for i in range(4)]
+
+    def max_concurrency(policy):
+        eng = _engine(policy, num_kv_blocks=16, block_size=16,
+                      max_batched_tokens=64)
+        for rid, i, o in reqs:
+            eng.add_request(_req(rid, i, o))
+        peak = 0
+        for _ in range(100_000):
+            if not eng.runnable():
+                break
+            eng.step()
+            peak = max(peak, sum(1 for s in eng.slots if s is not None))
+        return peak, eng
+
+    peak_fcfs, eng_f = max_concurrency("fcfs")
+    peak_lazy, eng_l = max_concurrency("sarathi")
+    assert peak_fcfs == 1
+    assert peak_lazy > 1
+    assert len(eng_f.finished) == len(reqs)
+    assert len(eng_l.finished) == len(reqs)
+
+
+def test_preemption_by_recompute():
+    """Decode growth past the pool preempts victims (recompute) and every
+    request still completes with its full token count."""
+    eng = _engine("sarathi", num_kv_blocks=12, block_size=16,
+                  max_batched_tokens=64)
+    outs = {}
+    for i in range(4):
+        r = _req(f"r{i}", 24, 48)
+        outs[r.req_id] = r.output_len
+        eng.add_request(r)
+    _drain(eng)
+    assert eng.n_preemptions > 0, "preemption path was not exercised"
+    assert len(eng.finished) == 4
+    for r in eng.finished:
+        # output_len shrinks when generated tokens fold into the prompt at
+        # preemption; the metrics object records the original contract
+        total_tokens = 1 + len(r.metrics.token_times)
+        assert total_tokens == outs[r.req_id], r.req_id
+        assert r.metrics.finish_time is not None
+        ts = [r.metrics.first_token_time] + r.metrics.token_times
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+    eng.allocator.check_invariants()
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_preempted_request_folds_generated_into_prompt():
+    eng = _engine("sarathi", num_kv_blocks=8, block_size=8,
+                  max_batched_tokens=32)
+    a = _req("a", 16, 40)
+    b = _req("b", 16, 40)
+    eng.add_request(a)
+    eng.add_request(b)
+    _drain(eng)
+    assert eng.n_preemptions > 0
+    victim = next(r for r in eng.finished if r.preempted)
+    # prompt grew by the tokens generated before preemption, and the
+    # output contract shrank by the same amount
+    assert victim.input_len > 16
+    assert victim.input_len - 16 == 40 - victim.output_len
+
+
+def test_lazy_refuses_infeasible_request_instead_of_crashing():
+    """A request whose final context can never fit the whole pool must be
+    refused at admission (the conservative policies' stall semantics), not
+    admitted lazily only to OOM mid-decode with no victim left
+    (regression: extend_to raised MemoryError and killed the run)."""
+    eng = _engine("sarathi", num_kv_blocks=64, block_size=16,
+                  max_batched_tokens=512, max_slots=256)
+    big = _req("big", 192, 2048)       # 2240 tokens > 1024-token pool
+    ok = _req("ok", 64, 32)
+    eng.add_request(big)
+    eng.add_request(ok)
+    _drain(eng)                        # must not raise MemoryError
+    assert len(eng.finished) == 1      # the feasible request completed
+    assert eng.finished[0].req_id == "ok"
+    assert eng.queue[0].req_id == "big"    # refused, still queued
+    assert not eng.runnable()
+
+
+def test_single_token_handoff_finishes_at_ingest():
+    """A fully-prefilled handoff whose output is complete after the
+    ingest-appended first token (output_len == 1) must finish cleanly
+    (regression: it stayed in the decode batch with a freed slot and
+    step() crashed on new_tokens[None]; pre-existing at the seed)."""
+    eng = _engine("fcfs")
+    r = _req("one", 32, 1)
+    r.context_len = 32
+    r.kv_payload = {"_null": 32}
+    r.first_token = 7
+    eng.add_request(r)
+    eng.step()
+    assert len(eng.finished) == 1
+    done = eng.finished[0]
+    assert done.generated == [7]
+    assert done.metrics.first_token_time is not None
+    assert done.metrics.finish_time == done.metrics.first_token_time
+    # the KV transfer is charged before the token counts (fairness rule)
+    assert done.metrics.first_token_time > 0.0
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_infeasible_request_does_not_livelock_cluster():
+    """A permanently refused request must not freeze the cluster loop:
+    the idle-jump reads next_ready_time, which must ignore ready-but-
+    inadmissible requests (their past timestamp made the jump a no-op and
+    the loop spun for max_steps, starving feasible traffic)."""
+    from repro.cluster.router import RoundRobinRouter
+    from repro.cluster.runtime import ClusterRuntime, WorkerEndpoint
+    eng = _engine("sarathi", num_kv_blocks=10, block_size=16,
+                  max_batched_tokens=64)
+    big = _req("big", 100, 100, arrival=0.0)   # 200 > 160-token pool
+    ok = _req("ok", 32, 8, arrival=5.0)
+    ok.metrics.arrival = 5.0
+    runtime = ClusterRuntime([WorkerEndpoint("w", eng, queue_cap=None)],
+                             RoundRobinRouter())
+    m = runtime.run([big, ok], max_steps=50_000)
+    assert m["completed"] == 1                 # ok served, no spin
+    assert eng.next_ready_time() is None       # refused head reports nothing
+
+
+def test_stale_ppi_timestamp_not_kept_as_ttft():
+    """A request preempted mid-prefill before emitting any token must get
+    its TTFT from the eventual completion, not from a stale timestamp a
+    PPI wrote into the shared metrics object (regression: the recompute
+    guard kept the pre-delivery timestamp, understating TTFT for exactly
+    the preempting policies under comparison)."""
+    eng = _engine("sarathi", num_kv_blocks=11, block_size=16,
+                  max_batched_tokens=4)
+    a = _req("a", 16, 64)
+    b = _req("b", 120, 4)
+    b.metrics.first_token_time = 1e-4   # PPI-side internal timestamp
+    eng.add_request(a)
+    eng.add_request(b)
+    _drain(eng)
+    assert b.preempted
+    assert b.metrics.first_token_time > 1e-4   # overwritten at delivery
+    assert 1 + len(b.metrics.token_times) == 4  # full output accounted
+
+
+def test_growth_preempts_midprefill_resident():
+    """The sole decoder's KV growth must be able to evict a mid-prefill
+    resident holding the remaining blocks (regression: with only RUNNING
+    victims considered, extend_to raised MemoryError here)."""
+    eng = _engine("sarathi", num_kv_blocks=11, block_size=16,
+                  max_batched_tokens=4)
+    a = _req("a", 16, 64, arrival=0.0)    # becomes the sole decoder
+    b = _req("b", 120, 4, arrival=0.0)    # slow prefill holds 8 blocks
+    eng.add_request(a)
+    eng.add_request(b)
+    _drain(eng)                            # must not raise MemoryError
+    assert eng.n_preemptions > 0
+    assert b.preempted                     # evicted while still prefilling
+    assert len(eng.finished) == 2
+    eng.allocator.check_invariants()
+
+
+def test_deterministic_replay():
+    """Same policy + same trace -> identical run, including preemptions."""
+    def one(policy):
+        eng = _engine(policy, num_kv_blocks=12, block_size=16,
+                      max_batched_tokens=64)
+        for i in range(4):
+            eng.add_request(_req(f"r{i}", 24, 48))
+        _drain(eng)
+        return (eng.n_preemptions, eng.clock,
+                [(r.req_id, r.metrics.finish_time) for r in eng.finished])
+
+    assert one("sarathi") == one("sarathi")
+    assert one("sjf") == one("sjf")
+
+
+# ---------------------------------------------------------------------------
+# policy threading: cluster DSL / builders
+# ---------------------------------------------------------------------------
+
+def test_cluster_dsl_policy_suffix():
+    from repro.cluster import build_cluster, parse_cluster_spec
+    spec = parse_cluster_spec("cronus:A100+A10@sarathi,2xworker:A10@sjf")
+    assert spec.nodes[0].options["sched_policy"] == "sarathi"
+    assert spec.nodes[1].options["sched_policy"] == "sjf"
+    with pytest.raises(ValueError):
+        parse_cluster_spec("worker:A10@bogus")
+    system = build_cluster(CFG, spec)
+    assert system.endpoints[0].sched_policy == "sarathi"
+    assert system.endpoints[0].cpi.ecfg.sched_policy == "sarathi"
+    assert system.endpoints[1].sched_policy == "sjf"
+    assert system.endpoints[1].engine.ecfg.sched_policy == "sjf"
+    # cluster-wide default fills nodes without a suffix
+    system2 = build_cluster(CFG, "worker:A10", sched_policy="sarathi")
+    assert system2.endpoints[0].sched_policy == "sarathi"
+
+
+def test_build_system_threads_policy():
+    from repro.serving.simulator import build_system
+    sys_c = build_system("cronus", CFG, A10, A10, sched_policy="sjf")
+    assert sys_c.cpi.ecfg.sched_policy == "sjf"
+    assert sys_c.ppi.ecfg.sched_policy == "sjf"
+
+
+def test_policies_through_cronus_pair_with_offload():
+    """The riskiest composition: Balancer pair + bounded decode offload +
+    lazy policies. Tiny KV pools force Alg. 1 fallback, offloaded decoders
+    on the prefill-only PPI, and CPI preemptions — everything must still
+    complete with exact token-timestamp counts."""
+    from repro.core.balancer import Balancer
+    from repro.core.cronus import build_cronus
+    from repro.core.predictor import profile_chunked, profile_prefill
+    from repro.serving.hardware import A100
+    hi, lo = DeviceModel(A100, CFG), DEV
+    for policy in ("fcfs", "sarathi", "sjf"):
+        bal = Balancer(profile_prefill(lo), profile_chunked(hi))
+        sys_c = build_cronus(CFG, lo, hi,
+                             executor_factory=lambda role: NullExecutor(),
+                             balancer=bal, max_batched_tokens=64,
+                             max_slots=8, block_size=4,
+                             decode_offload=True, sched_policy=policy)
+        for eng, blocks in ((sys_c.cpi, 40), (sys_c.ppi, 60)):
+            eng.allocator = type(eng.allocator)(num_blocks=blocks,
+                                                block_size=4)
+            eng.ecfg.num_kv_blocks = blocks
+        reqs = [_req(f"r{i}", 20 + i % 13, 30) for i in range(12)]
+        res = sys_c.run(reqs)
+        assert res["completed"] == 12, policy
+        if policy != "fcfs":
+            assert sys_c.cpi.n_preemptions > 0, policy
+        for eng in (sys_c.ppi, sys_c.cpi):
+            eng.allocator.check_invariants()
+            for r in eng.finished:
+                assert 1 + len(r.metrics.token_times) == 30, (policy, r.req_id)
+
+
+def test_policy_end_to_end_small_trace():
+    """All policies complete a small mixed trace through the cluster
+    runtime (worker endpoint) with consistent metrics."""
+    from repro.cluster.router import RoundRobinRouter
+    from repro.cluster.runtime import ClusterRuntime, WorkerEndpoint
+    for policy in ("fcfs", "sarathi", "sjf"):
+        eng = _engine(policy, num_kv_blocks=256, max_slots=16,
+                      max_batched_tokens=128)
+        reqs = [_req(f"q{i}", 8 * (i % 5 + 1), 4 + i % 7, arrival=0.1 * i)
+                for i in range(12)]
+        for r in reqs:
+            r.metrics.arrival = r.arrival
+        runtime = ClusterRuntime(
+            [WorkerEndpoint("w", eng, queue_cap=None)], RoundRobinRouter())
+        m = runtime.run(reqs)
+        assert m["completed"] == 12, policy
+        assert m["throughput"] > 0, policy
