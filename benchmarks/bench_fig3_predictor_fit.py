@@ -43,8 +43,8 @@ def run():
     lengths = [16, 32, 64, 96, 128, 192, 256]
     times = []
     ex = RealExecutor(model, params, max_slots=1, s_kv=512)
-    for l in lengths:  # warm up each shape, then time
-        toks = np.arange(l) % scfg.vocab_size
+    for n in lengths:  # warm up each shape, then time
+        toks = np.arange(n) % scfg.vocab_size
         ex.reset_slot(0)
         ex.prefill_chunk(0, toks, 0, True)
         ex.reset_slot(0)

@@ -1,0 +1,125 @@
+"""Performance regression gate: diff BENCH_*.json against committed baselines.
+
+Each benchmark writes a list of row dicts. Rows are keyed by their
+non-numeric fields (rig / trace / policy / router / cache); the gate then
+compares the perf-critical numeric columns against the baseline row:
+
+  * ``throughput`` / ``goodput`` — fail when the current value drops more
+    than ``--tol`` below baseline;
+  * ``ttft_p99`` / ``tbt_p99`` — fail when the current value rises more
+    than ``--tol`` above baseline.
+
+Rows present in the baseline but missing from the current run fail (lost
+coverage); new rows only inform. All benchmark time is simulated
+(roofline device models, deterministic traces), so values are stable
+across machines and the gate can be tight.
+
+Usage:
+  python -m benchmarks.check_regression BENCH_foo.json [BENCH_bar.json ...] \\
+      --baseline benchmarks/baselines [--tol 0.15]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+LOWER_IS_BAD = ("throughput", "goodput")
+HIGHER_IS_BAD = ("ttft_p99", "tbt_p99")
+KEY_FIELDS = ("rig", "trace", "policy", "router", "cache")
+
+
+def row_key(row):
+    return tuple((f, row[f]) for f in KEY_FIELDS if f in row)
+
+
+def index_rows(rows):
+    out = {}
+    for row in rows:
+        key = row_key(row)
+        if key in out:
+            raise SystemExit(f"duplicate benchmark row key {key}")
+        out[key] = row
+    return out
+
+
+def compare(name, current, baseline, tol):
+    """Returns a list of human-readable failure strings."""
+    failures = []
+    cur, base = index_rows(current), index_rows(baseline)
+    for key, brow in base.items():
+        label = "/".join(str(v) for _, v in key)
+        crow = cur.get(key)
+        if crow is None:
+            failures.append(f"{name}: row {label} missing from current run")
+            continue
+        for col in LOWER_IS_BAD + HIGHER_IS_BAD:
+            if col not in brow or col not in crow:
+                continue
+            b, c = float(brow[col]), float(crow[col])
+            if math.isnan(b) or math.isnan(c):
+                continue
+            if col in LOWER_IS_BAD and c < b * (1.0 - tol):
+                failures.append(
+                    f"{name}: {label}: {col} regressed "
+                    f"{b:.4f} -> {c:.4f} (> {tol:.0%} drop)"
+                )
+            if col in HIGHER_IS_BAD and c > b * (1.0 + tol) and c - b > 1e-9:
+                failures.append(
+                    f"{name}: {label}: {col} regressed "
+                    f"{b:.4f} -> {c:.4f} (> {tol:.0%} rise)"
+                )
+    for key in cur.keys() - base.keys():
+        label = "/".join(str(v) for _, v in key)
+        print(f"note: {name}: new row {label} (no baseline yet)")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", nargs="+", help="BENCH_*.json from this run")
+    ap.add_argument(
+        "--baseline",
+        default="benchmarks/baselines",
+        help="directory of committed baseline BENCH_*.json",
+    )
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.15,
+        help="allowed relative slack before failing (0.15 = 15%%)",
+    )
+    args = ap.parse_args(argv)
+
+    failures = []
+    for path in args.current:
+        name = os.path.basename(path)
+        base_path = os.path.join(args.baseline, name)
+        if not os.path.exists(base_path):
+            raise SystemExit(
+                f"no baseline {base_path}; generate it with the benchmark's "
+                f"--out and commit it under {args.baseline}/"
+            )
+        with open(path) as f:
+            current = json.load(f)
+        with open(base_path) as f:
+            baseline = json.load(f)
+        failures += compare(name, current, baseline, args.tol)
+
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} perf regression(s) beyond "
+            f"{args.tol:.0%} tolerance:"
+        )
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"OK: all rows within {args.tol:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

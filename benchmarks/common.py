@@ -2,11 +2,9 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable
 
-from repro.configs import get_config
 from repro.core.metrics import slo_attainment
-from repro.serving.hardware import A10, A30, A100, DEVICES
 from repro.serving.trace import make_trace
 
 # Latency deadlines for goodput (SLO-attainment) reporting. Chosen from the

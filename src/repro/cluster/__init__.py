@@ -8,12 +8,13 @@ Layering (bottom-up):
     the globally-lagging runnable engine and fires timed events (arrivals,
     KV-transfer completions).
   * ``repro.cluster.router`` — picks an endpoint per request (round-robin,
-    least-loaded, session-affinity).
+    least-loaded, session-affinity, prefix-affinity).
   * ``repro.cluster.topology`` — builds a whole heterogeneous cluster from
     a declarative spec such as ``"2xcronus:A100+A10,4xworker:A10"``.
 """
 from repro.cluster.pair import CronusPairEndpoint
-from repro.cluster.router import (LeastLoadedRouter, Router, RoundRobinRouter,
+from repro.cluster.router import (LeastLoadedRouter, PrefixAffinityRouter,
+                                  Router, RoundRobinRouter,
                                   SessionAffinityRouter, make_router)
 from repro.cluster.runtime import (ClusterRuntime, Endpoint, EndpointStats,
                                    WorkerEndpoint)
@@ -24,7 +25,7 @@ __all__ = [
     "ClusterRuntime", "Endpoint", "EndpointStats", "WorkerEndpoint",
     "CronusPairEndpoint",
     "Router", "RoundRobinRouter", "LeastLoadedRouter",
-    "SessionAffinityRouter", "make_router",
+    "SessionAffinityRouter", "PrefixAffinityRouter", "make_router",
     "ClusterSpec", "NodeSpec", "ClusterSystem", "build_cluster",
     "parse_cluster_spec",
 ]

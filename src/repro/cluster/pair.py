@@ -30,7 +30,7 @@ fallback (full prefill on the PPI) then fires only under real pressure.
 from __future__ import annotations
 
 import copy
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 from repro.core.engine import Engine
 from repro.core.request import ReqState, Request

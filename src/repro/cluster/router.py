@@ -16,15 +16,27 @@ Policies:
   * :class:`SessionAffinityRouter` — requests carrying a ``session`` stick
     to the endpoint that served the session first (KV reuse locality for
     multi-turn conversations); session-less requests and first turns fall
-    through to an inner policy (least-loaded by default).
+    through to an inner policy (least-loaded by default). A pin is not
+    eternal: a home endpoint that keeps rejecting, or that is drastically
+    more loaded than the best alternative, triggers a rebalance (the
+    session re-pins through the fallback policy).
+  * :class:`PrefixAffinityRouter` — routes each request to the endpoint
+    holding the longest cached prefix of its prompt (live engine probe
+    via ``Endpoint.cached_prefix_tokens``, backed by the router's own
+    routing history), so shared system prompts and multi-turn sessions
+    concentrate where their KV already lives; cache-cold requests fall
+    through to least-loaded, and a load guard keeps affinity from
+    convoying a hot endpoint.
 """
 from __future__ import annotations
 
 import abc
+from collections import OrderedDict
 from typing import List, Optional, Sequence
 
 from repro.cluster.runtime import Endpoint
 from repro.core.request import Request
+from repro.kvcache.allocator import _chain
 
 
 class Router(abc.ABC):
@@ -77,19 +89,132 @@ class SessionAffinityRouter(Router):
     # session doesn't convoy the whole arrival queue
     lookahead = 64
 
-    def __init__(self, fallback: Optional[Router] = None):
+    def __init__(self, fallback: Optional[Router] = None,
+                 max_stalls: int = 4, imbalance: float = 8.0):
         self.fallback = fallback or LeastLoadedRouter()
+        self.max_stalls = max_stalls   # consecutive home rejections tolerated
+        self.imbalance = imbalance     # home queue depth vs best alternative
         self._table = {}   # session id -> endpoint
+        self._stalls = {}  # session id -> consecutive deferred selects
+
+    def _overloaded(self, home, req, endpoints) -> bool:
+        """Staleness escape hatch: a pin is worth KV locality only while
+        the home endpoint is roughly competitive. If its queue runs
+        ``imbalance``x deeper than the best alternative that would take
+        the request, migrating (and re-prefilling) beats waiting."""
+        others = [ep.stats().queue_depth for ep in endpoints
+                  if ep is not home and ep.can_accept(req)]
+        if not others:
+            return False
+        return home.stats().queue_depth > self.imbalance * (min(others) + 1)
 
     def select(self, req, endpoints):
         sess = getattr(req, "session", None)
         if sess is not None and sess in self._table:
             ep = self._table[sess]
-            # sticky: wait for the home endpoint rather than migrate KV
-            return ep if ep.can_accept(req) else None
+            if ep.can_accept(req) and not self._overloaded(ep, req,
+                                                           endpoints):
+                self._stalls.pop(sess, None)
+                return ep
+            # home endpoint full or overloaded: tolerate a few stalls for
+            # KV locality, then rebalance the session via the fallback
+            # (the old behaviour pinned forever, convoying the session
+            # behind the one most-loaded endpoint)
+            stalls = self._stalls.get(sess, 0) + 1
+            self._stalls[sess] = stalls
+            if stalls <= self.max_stalls and not self._overloaded(
+                    ep, req, endpoints):
+                return None
         ep = self.fallback.select(req, endpoints)
         if ep is not None and sess is not None:
             self._table[sess] = ep
+            self._stalls.pop(sess, None)
+        return ep
+
+
+class PrefixAffinityRouter(Router):
+    """Route toward the endpoint holding the longest cached prefix of the
+    request's prompt (vLLM-production-stack-style prefix-aware routing);
+    cache-cold requests fall back to least-loaded.
+
+    Two affinity signals, the stronger wins:
+
+      * the *live probe* — ``Endpoint.cached_prefix_tokens`` walks each
+        endpoint's actual prefix index (exact, but blind to requests the
+        runtime dispatched ahead of the simulated clock, whose KV is not
+        cached yet);
+      * *routing history* — block-grained chain hashes of every prompt
+        this router placed, kept per endpoint (the production-stack
+        trick: the router's own record of where a prefix went predicts
+        where its KV lives, without asking the engines).
+
+    ``min_match`` ignores trivially short matches that aren't worth
+    skewing load for, and ``max_imbalance`` caps how much deeper than the
+    least-loaded alternative the matched endpoint's queue may run — a hit
+    saves one prefix prefill, not an unbounded wait behind a hot spot."""
+
+    def __init__(self, fallback: Optional[Router] = None,
+                 min_match: int = 16, max_imbalance: int = 4,
+                 history_per_endpoint: int = 8192):
+        self.fallback = fallback or LeastLoadedRouter()
+        self.min_match = min_match
+        self.max_imbalance = max_imbalance
+        self.history_per_endpoint = history_per_endpoint
+        self._history: List[OrderedDict] = []    # per endpoint: hash -> True
+
+    def _prompt_hashes(self, req, block_size: int) -> List[bytes]:
+        hashes, h = [], b""
+        prompt = req.prompt
+        for lo in range(0, len(prompt) - block_size + 1, block_size):
+            h = _chain(h, prompt[lo:lo + block_size])
+            hashes.append(h)
+        return hashes
+
+    def _history_match(self, i: int, hashes: List[bytes],
+                      block_size: int) -> int:
+        if i >= len(self._history):
+            return 0
+        seen = self._history[i]
+        n = 0
+        for h in hashes:
+            if h not in seen:
+                break
+            n += block_size
+        return n
+
+    def _record(self, i: int, hashes: List[bytes]):
+        while len(self._history) <= i:
+            self._history.append(OrderedDict())
+        seen = self._history[i]
+        for h in hashes:
+            seen.pop(h, None)
+            seen[h] = True                       # re-insert at MRU end
+        while len(seen) > self.history_per_endpoint:
+            seen.popitem(last=False)
+
+    def select(self, req, endpoints):
+        bs = endpoints[0].engines[-1].ecfg.block_size
+        hashes = self._prompt_hashes(req, bs)
+        cands = [(i, ep) for i, ep in enumerate(endpoints)
+                 if ep.can_accept(req)]
+        if not cands:
+            return None
+        best, best_i, best_len = None, None, self.min_match - 1
+        for i, ep in cands:
+            n = max(ep.cached_prefix_tokens(req),
+                    self._history_match(i, hashes, bs))
+            if n > best_len:
+                best, best_i, best_len = ep, i, n
+        if best is not None:
+            # affinity is only worth the skew while the matched endpoint
+            # is roughly competitive on load
+            floor = min(ep.stats().queue_depth for _, ep in cands)
+            if best.stats().queue_depth <= floor + self.max_imbalance:
+                self._record(best_i, hashes)
+                return best
+        ep = self.fallback.select(req, endpoints)
+        if ep is not None:
+            self._record(endpoints.index(ep), hashes)
         return ep
 
 
@@ -97,6 +222,7 @@ ROUTERS = {
     "round_robin": RoundRobinRouter,
     "least_loaded": LeastLoadedRouter,
     "session": SessionAffinityRouter,
+    "prefix_affinity": PrefixAffinityRouter,
 }
 
 

@@ -75,6 +75,13 @@ class Endpoint(abc.ABC):
         """Completion count — hot path; override to avoid list copies."""
         return len(self.finished())
 
+    def cached_prefix_tokens(self, req: Request) -> int:
+        """Longest prefix of ``req``'s prompt resident in any of this
+        endpoint's KV caches (0 when prefix caching is off) — the
+        prefix-affinity routing signal. Read-only probe."""
+        return max(e.allocator.lookup_prefix(req.prompt)
+                   for e in self.engines)
+
     @property
     def sched_policy(self) -> str:
         """Batch-composition policy of the decode-side engine (pairs put

@@ -13,6 +13,11 @@ A spec is a list of :class:`NodeSpec` (or the compact string DSL):
            the iteration-level batch-composition policy for that node's
            engines (see ``repro.scheduling.SCHEDULERS``; default fcfs).
 
+    "2xworker:A10@sarathi@cache"
+        -> ``@cache`` turns on shared-prefix KV reuse for that node's
+           engines (``EngineConfig.prefix_cache``); combine with
+           ``router="prefix_affinity"`` so requests chase their prefix.
+
 Node kinds:
   * ``cronus:HI+LO``    — Balancer-split pair, prefill on LO, decode on HI
   * ``disagg_lh:HI+LO`` — full prefill on LO, decode-only HI
@@ -30,19 +35,19 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.cluster.router import Router, make_router
 from repro.cluster.runtime import ClusterRuntime, Endpoint, WorkerEndpoint
 from repro.core.engine import Engine, EngineConfig
 from repro.scheduling import SCHEDULERS
-from repro.serving.hardware import DEVICES, DeviceModel, DeviceSpec
+from repro.serving.hardware import DEVICES, DeviceModel
 
 PAIR_KINDS = ("cronus", "disagg_lh", "disagg_hl")
 NODE_KINDS = PAIR_KINDS + ("worker", "pp")
 
 _NODE_RE = re.compile(
-    r"^(?:(\d+)x)?([a-z_]+):([A-Za-z0-9+]+)(?:@([a-z_]+))?$")
+    r"^(?:(\d+)x)?([a-z_]+):([A-Za-z0-9+]+)((?:@[a-z_]+)*)$")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,15 +91,27 @@ class ClusterSpec:
 
 def parse_cluster_spec(text: str, router: str = "least_loaded") -> ClusterSpec:
     """Parse the compact DSL, e.g.
-    ``"2xcronus:A100+A10,4xworker:A10@sarathi"``."""
+    ``"2xcronus:A100+A10,4xworker:A10@sarathi@cache"``. ``@`` suffixes
+    stack: a scheduling-policy name picks the node's batch-composition
+    policy, the literal ``cache`` enables shared-prefix KV reuse."""
     nodes = []
     for part in filter(None, (p.strip() for p in text.split(","))):
         m = _NODE_RE.match(part)
         if m is None:
             raise ValueError(f"bad node spec {part!r} (expected "
-                             "[<count>x]<kind>:<dev>[+<dev>][@<policy>])")
-        count, kind, devs, policy = m.groups()
-        options = {"sched_policy": policy} if policy else {}
+                             "[<count>x]<kind>:<dev>[+<dev>][@<policy>]"
+                             "[@cache])")
+        count, kind, devs, suffixes = m.groups()
+        options: Dict = {}
+        for suffix in filter(None, (suffixes or "").split("@")):
+            if suffix == "cache":
+                options["prefix_cache"] = True
+            elif suffix in SCHEDULERS:
+                options["sched_policy"] = suffix
+            else:
+                raise ValueError(
+                    f"unknown node suffix @{suffix} in {part!r}; expected "
+                    f"'cache' or a policy from {sorted(SCHEDULERS)}")
         nodes.append(NodeSpec(kind=kind, devices=tuple(devs.split("+")),
                               count=int(count or 1), options=options))
     if not nodes:
@@ -135,7 +152,8 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                   max_slots: int = 256, block_size: int = 16,
                   max_batched_tokens: int = 512,
                   worker_queue_cap: Optional[int] = 4,
-                  sched_policy: str = "fcfs") -> ClusterSystem:
+                  sched_policy: str = "fcfs",
+                  prefix_cache: bool = False) -> ClusterSystem:
     """Materialise a :class:`ClusterSpec` into engines + endpoints.
 
     ``executor_factory(role)`` is called with ``"ppi"``/``"cpi"`` for pair
@@ -144,7 +162,9 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
 
     ``sched_policy`` is the cluster-wide default batch-composition policy;
     a node's ``@policy`` DSL suffix (``options["sched_policy"]``)
-    overrides it per endpoint.
+    overrides it per endpoint. ``prefix_cache`` likewise is the
+    cluster-wide default for shared-prefix KV reuse, overridden per node
+    by the ``@cache`` suffix.
     """
     # imported lazily: core.cronus/baselines import the cluster runtime
     from repro.core.balancer import Balancer
@@ -161,6 +181,7 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
     endpoints: List[Endpoint] = []
     for node in spec.nodes:
         policy = node.options.get("sched_policy", sched_policy)
+        cache = node.options.get("prefix_cache", prefix_cache)
         for i in range(node.count):
             name = f"{node.kind}{len(endpoints)}"
             if node.kind in PAIR_KINDS:
@@ -170,14 +191,17 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                     bal = Balancer(profile_prefill(lo), profile_chunked(hi))
                     system = build_cronus(
                         cfg, lo, hi, balancer=bal, sched_policy=policy,
+                        prefix_cache=cache,
                         decode_offload=node.options.get("decode_offload",
                                                         False), **kw)
                 elif node.kind == "disagg_lh":
                     system = build_disaggregated(cfg, lo, hi,
-                                                 sched_policy=policy, **kw)
+                                                 sched_policy=policy,
+                                                 prefix_cache=cache, **kw)
                 else:                                   # disagg_hl
                     system = build_disaggregated(cfg, hi, lo,
-                                                 sched_policy=policy, **kw)
+                                                 sched_policy=policy,
+                                                 prefix_cache=cache, **kw)
                 endpoints.append(system.endpoint(name))
             elif node.kind == "pp":
                 hi_spec, lo_spec = (DEVICES[d] for d in node.devices)
@@ -188,7 +212,7 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                                  max_slots=max_slots, block_size=block_size,
                                  num_kv_blocks=max(
                                      device.kv_block_budget(block_size), 64),
-                                 sched_policy=policy),
+                                 sched_policy=policy, prefix_cache=cache),
                              device, executor_factory("pp"))
                 endpoints.append(WorkerEndpoint(name, eng, queue_cap=None))
             else:                                        # worker
@@ -200,7 +224,7 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                                  max_slots=max_slots, block_size=block_size,
                                  num_kv_blocks=max(
                                      dev.kv_block_budget(block_size), 64),
-                                 sched_policy=policy),
+                                 sched_policy=policy, prefix_cache=cache),
                              dev, executor_factory("worker"))
                 endpoints.append(WorkerEndpoint(
                     name, eng,

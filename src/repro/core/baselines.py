@@ -46,18 +46,21 @@ class DPSystem:
 
 def build_dp(cfg, hi_device: DeviceModel, lo_device: DeviceModel, *,
              executor_factory: Callable, max_slots: int = 64,
-             block_size: int = 16, sched_policy: str = "fcfs") -> DPSystem:
+             block_size: int = 16, sched_policy: str = "fcfs",
+             prefix_cache: bool = False) -> DPSystem:
     hi = Engine("dp-hi", cfg,
                 EngineConfig(max_batched_tokens=512, max_slots=max_slots,
                              block_size=block_size,
                              num_kv_blocks=max(hi_device.kv_block_budget(block_size), 64),
-                             sched_policy=sched_policy),
+                             sched_policy=sched_policy,
+                             prefix_cache=prefix_cache),
                 hi_device, executor_factory("hi"))
     lo = Engine("dp-lo", cfg,
                 EngineConfig(max_batched_tokens=256, max_slots=max_slots,
                              block_size=block_size,
                              num_kv_blocks=max(lo_device.kv_block_budget(block_size), 64),
-                             sched_policy=sched_policy),
+                             sched_policy=sched_policy,
+                             prefix_cache=prefix_cache),
                 lo_device, executor_factory("lo"))
     return DPSystem(engines=[hi, lo], weights=[3, 1], queue_caps=[3, 1])
 
@@ -139,12 +142,14 @@ class PPSystem:
 
 def build_pp(cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec, *,
              executor_factory: Callable, max_slots: int = 64,
-             block_size: int = 16, sched_policy: str = "fcfs") -> PPSystem:
+             block_size: int = 16, sched_policy: str = "fcfs",
+             prefix_cache: bool = False) -> PPSystem:
     device = PipelineDeviceModel(hi_spec, lo_spec, cfg)
     eng = Engine("pp", cfg,
                  EngineConfig(max_batched_tokens=512, max_slots=max_slots,
                               block_size=block_size,
                               num_kv_blocks=max(device.kv_block_budget(block_size), 64),
-                              sched_policy=sched_policy),
+                              sched_policy=sched_policy,
+                              prefix_cache=prefix_cache),
                  device, executor_factory("pp"))
     return PPSystem(engine=eng)

@@ -97,12 +97,16 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
                  max_slots: int = 64, block_size: int = 16,
                  decode_only_cpi: bool = False,
                  decode_offload: bool = False,
-                 sched_policy: str = "fcfs") -> CronusSystem:
+                 sched_policy: str = "fcfs",
+                 prefix_cache: bool = False) -> CronusSystem:
     """executor_factory(role: str) -> executor ('ppi' | 'cpi').
 
     ``sched_policy`` selects the iteration-level batch-composition policy
     (``repro.scheduling.SCHEDULERS``) for BOTH engines of the pair; the
-    default ``fcfs`` reproduces the seed engine bit-for-bit."""
+    default ``fcfs`` reproduces the seed engine bit-for-bit.
+    ``prefix_cache`` enables shared-prefix KV reuse on both engines: a
+    hit on the PPI shortens its split-prefill portion, a hit on the CPI
+    shortens the chunked remainder."""
     ppi_blocks = max(ppi_device.kv_block_budget(block_size), 64)
     cpi_blocks = max(cpi_device.kv_block_budget(block_size), 64)
     ppi = Engine("ppi", cfg,
@@ -110,14 +114,16 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
                               max_slots=max_slots if decode_offload else 2,
                               block_size=block_size,
                               num_kv_blocks=ppi_blocks, prefill_only=True,
-                              sched_policy=sched_policy),
+                              sched_policy=sched_policy,
+                              prefix_cache=prefix_cache),
                  ppi_device, executor_factory("ppi"))
     cpi = Engine("cpi", cfg,
                  EngineConfig(max_batched_tokens=max_batched_tokens,
                               max_slots=max_slots, block_size=block_size,
                               num_kv_blocks=cpi_blocks,
                               decode_only=decode_only_cpi,
-                              sched_policy=sched_policy),
+                              sched_policy=sched_policy,
+                              prefix_cache=prefix_cache),
                  cpi_device, executor_factory("cpi"))
     return CronusSystem(ppi=ppi, cpi=cpi,
                         balancer=balancer if balancer is not None

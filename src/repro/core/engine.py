@@ -44,6 +44,7 @@ class EngineConfig:
     sched_policy: str = "fcfs"         # see repro.scheduling.SCHEDULERS
     skip_ahead: Optional[bool] = None  # None -> policy default (fcfs: off)
     lazy_kv: Optional[bool] = None     # None -> policy default (fcfs: off)
+    prefix_cache: bool = False         # shared-prefix KV reuse (off = seed)
 
 
 class Engine:
@@ -56,7 +57,8 @@ class Engine:
         self.executor = executor
         self.clock = 0.0
         self.allocator = BlockAllocator(engine_cfg.num_kv_blocks,
-                                        engine_cfg.block_size)
+                                        engine_cfg.block_size,
+                                        prefix_cache=engine_cfg.prefix_cache)
         self.scheduler = make_scheduler(engine_cfg.sched_policy, engine_cfg)
         self.slots: List[Optional[Request]] = [None] * engine_cfg.max_slots
         self.queue: Deque[Request] = deque()
@@ -87,11 +89,38 @@ class Engine:
     def _place(self, req: Request):
         """Queue -> slot, per the plan (blocks reserved per the policy:
         full final context for conservative policies, prompt-only for lazy
-        ones, which then grow via ``extend_to``)."""
+        ones, which then grow via ``extend_to``). With prefix caching the
+        block table is seeded from the cache first: every reused token
+        advances ``context_len`` past its prefill. The last prompt token
+        is never taken from the cache — its chunk computes the first
+        output token."""
         slot = self._free_slot()
         assert slot is not None, "plan admitted with no free slot"
-        self.allocator.allocate(req.req_id,
-                                self.scheduler.admission_tokens(req))
+        if self.allocator.prefix_cache and req.input_len > 1:
+            if req.context_len == 0 and req.kv_payload is None:
+                shared = self.allocator.share_blocks(
+                    req.req_id, req.prompt, max_tokens=req.input_len - 1)
+                if shared:
+                    req.context_len = shared
+                    req.metrics.cached_prefix_tokens += shared
+            elif req.kv_payload is not None \
+                    and req.context_len < req.input_len:
+                # Cronus handoff mid-prompt: the cache may hold a longer
+                # prefix than the PPI's partial — sharing it shortens the
+                # chunked remainder too (fully-covered blocks dedupe even
+                # when the match is shorter than the payload)
+                shared = self.allocator.share_blocks(
+                    req.req_id, req.prompt, max_tokens=req.input_len - 1)
+                if shared > req.context_len:
+                    req.metrics.cached_prefix_tokens += \
+                        shared - req.context_len
+                    req.context_len = shared
+        if self.allocator.owned_blocks(req.req_id):
+            self.allocator.extend_to(req.req_id,
+                                     self.scheduler.admission_tokens(req))
+        else:
+            self.allocator.allocate(req.req_id,
+                                    self.scheduler.admission_tokens(req))
         req.slot = slot
         self.slots[slot] = req
         self.executor.reset_slot(slot)
@@ -203,8 +232,12 @@ class Engine:
             if r and r.state == ReqState.TRANSFER:
                 self.executor.inject_kv(r.slot, r.kv_payload, r.context_len)
                 if not r.local_payload:   # decode-offload: KV never moved
+                    # the payload holds the PPI's partial_len tokens; a
+                    # prefix-cache hit may have advanced context_len past
+                    # it, but only the payload actually crosses the wire
+                    moved = r.partial_len if r.partial_len else r.context_len
                     transfer_time = max(transfer_time,
-                                        self.device.transfer_time(r.context_len))
+                                        self.device.transfer_time(moved))
                 r.kv_payload = None
                 r.state = (ReqState.RUNNING if r.context_len >= r.input_len
                            else ReqState.PREFILL)
@@ -224,7 +257,15 @@ class Engine:
             for r in decode_reqs:
                 self.allocator.extend_to(r.req_id, r.total_ctx)
 
-        if not plan.prefill and not decode_reqs:
+        # Executed chunk lengths clamp to prefill_remaining as it stands
+        # AFTER placement: a prefix-cache hit at _place advanced
+        # context_len past the plan's view, so only the uncached tail runs
+        # (and only it is charged below). Without caching the clamp is a
+        # no-op and the executed chunks equal the plan's.
+        chunks = [(c.req, n) for c in plan.prefill
+                  if (n := min(c.chunk_len, c.req.prefill_remaining)) > 0]
+
+        if not chunks and not decode_reqs:
             # idle iteration (only transfers); ingest-completed requests
             # still pay the transfer before finishing (TTFT fairness rule)
             if ttft_at_ingest:
@@ -236,24 +277,23 @@ class Engine:
             return transfer_time
 
         # --- execute prefill chunks (possibly several requests) -----------
-        prefill_tokens = plan.n_prefill_tokens
-        if len(plan.prefill) == 1:
-            prefill_ctx: float = plan.prefill[0].req.context_len
-        elif plan.prefill:
+        prefill_tokens = sum(n for _, n in chunks)
+        if len(chunks) == 1:
+            prefill_ctx: float = chunks[0][0].context_len
+        elif chunks:
             # token-weighted mean context start for the roofline attn term
-            prefill_ctx = sum(c.chunk_len * c.req.context_len
-                              for c in plan.prefill) / prefill_tokens
+            prefill_ctx = sum(n * r.context_len
+                              for r, n in chunks) / prefill_tokens
         else:
             prefill_ctx = 0
         first_tokens: Dict[str, Optional[int]] = {}
-        for c in plan.prefill:
-            r = c.req
-            tokens = r.prompt[r.context_len: r.context_len + c.chunk_len]
-            completes = r.context_len + c.chunk_len >= r.input_len
+        for r, n in chunks:
+            tokens = r.prompt[r.context_len: r.context_len + n]
+            completes = r.context_len + n >= r.input_len
             first = self.executor.prefill_chunk(
                 r.slot, tokens, r.context_len, completes,
                 enc_emb=r.enc_emb if r.context_len == 0 else None)
-            r.context_len += c.chunk_len
+            r.context_len += n
             if completes:
                 first_tokens[r.req_id] = first
 
@@ -279,8 +319,7 @@ class Engine:
                 self._finish(r)
 
         # --- bookkeeping ----------------------------------------------------
-        for c in plan.prefill:
-            r = c.req
+        for r, _ in chunks:
             if r.context_len < r.input_len:
                 continue
             first = first_tokens[r.req_id]
@@ -330,7 +369,15 @@ class Engine:
     # ------------------------------------------------------------------
     def _finish(self, req: Request):
         req.state = ReqState.FINISHED
-        self.allocator.free(req.req_id)
+        if self.allocator.prefix_cache:
+            # register the finished sequence (prompt + generated) in the
+            # prefix index: its blocks are retained as evictable cache
+            seq = (np.concatenate([req.prompt,
+                                   np.asarray(req.generated, np.int32)])
+                   if req.generated else req.prompt)
+            self.allocator.free(req.req_id, cache_tokens=seq)
+        else:
+            self.allocator.free(req.req_id)
         self.executor.reset_slot(req.slot)
         self.slots[req.slot] = None
         req.slot = None
@@ -338,9 +385,15 @@ class Engine:
 
     def _complete_prefill_instance(self, req: Request):
         """Prefill-only instance: extract KV and release the slot; the
-        orchestrator routes the payload to the decode instance."""
+        orchestrator routes the payload to the decode instance. With
+        prefix caching the prefilled prompt is registered, so repeated
+        shared prefixes shorten the PPI's split-prefill portion too."""
         req.kv_payload = self.executor.extract_kv(req.slot, req.context_len)
-        self.allocator.free(req.req_id)
+        if self.allocator.prefix_cache:
+            self.allocator.free(req.req_id,
+                                cache_tokens=req.prompt[:req.context_len])
+        else:
+            self.allocator.free(req.req_id)
         self.slots[req.slot] = None
         req.slot = None
         req.state = ReqState.WAITING

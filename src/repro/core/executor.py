@@ -15,7 +15,7 @@ real K/V first. Freed slots reset their position row to -1.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional
 
 import numpy as np
 

@@ -17,6 +17,7 @@ class RequestMetrics:
     first_token_time: Optional[float] = None    # absolute time of first token
     token_times: List[float] = dataclasses.field(default_factory=list)
     finish_time: Optional[float] = None
+    cached_prefix_tokens: int = 0     # prompt tokens served from prefix cache
 
     @property
     def ttft(self) -> float:
@@ -84,6 +85,18 @@ def aggregate(reqs: List[RequestMetrics],
         "completed": len(done),
         "makespan": t1 - t0,
     }
+    saved = sum(r.cached_prefix_tokens for r in done)
+    if saved:
+        # Prefix-cache keys appear only when the cache actually hit, so a
+        # cache-off run's dict is byte-identical to the seed's. The rate
+        # is tokens saved over prompt tokens ingested — a savings ratio,
+        # not a probability: cached_prefix_tokens accumulates across the
+        # PPI and CPI sides of one Cronus request and across
+        # preemption-recompute cycles (whose folded prompts re-share), so
+        # it can rarely exceed 1.
+        out["prefill_tokens_saved"] = saved
+        out["prefix_cache_hit_rate"] = saved / max(
+            sum(r.input_len for r in done), 1)
     if ttft_slo is not None and tbt_slo is not None:
         out["goodput"] = slo_attainment(reqs, ttft_slo, tbt_slo)
     return out

@@ -71,7 +71,7 @@ class ChunkedIterPredictor:
 def profile_prefill(device_model, lengths=None) -> PrefillPredictor:
     """Profile partial-prefill times on a device model and fit Eq. 2."""
     lengths = lengths if lengths is not None else np.linspace(64, 8192, 40)
-    times = [device_model.prefill_time(int(l)) for l in lengths]
+    times = [device_model.prefill_time(int(n)) for n in lengths]
     return PrefillPredictor().fit(lengths, times)
 
 
@@ -93,5 +93,5 @@ def profile_chunked(device_model, chunk_size: int = 512,
 
 def profile_prefill_measured(fn, lengths) -> PrefillPredictor:
     """Fit Eq. 2 on measured wall times: fn(length)->seconds."""
-    times = [fn(int(l)) for l in lengths]
+    times = [fn(int(n)) for n in lengths]
     return PrefillPredictor().fit(list(lengths), times)

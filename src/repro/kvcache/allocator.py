@@ -4,23 +4,77 @@ The Balancer (paper Alg. 1) gates admission on ``N_free < ceil(L_in / N_size)``
 — this allocator is the source of truth for that check. The functional
 engine allocates blocks per request as its context grows; the Pallas
 paged-attention kernel consumes the same block tables on TPU.
+
+Prefix caching (``prefix_cache=True``, default off — the off path is
+bit-identical to the plain allocator):
+
+  * every block carries a refcount; blocks of a finished request whose
+    content is registered in the prefix index are RETAINED at refcount 0
+    in an LRU list instead of returning to the free list;
+  * the index is a hash-of-token-ids chain (vLLM-style): block ``i`` of a
+    sequence hashes ``(parent_chain_hash, token_ids[i*bs:(i+1)*bs])``, so
+    ``lookup_prefix`` walks full blocks hash-by-hash and ``share_blocks``
+    bumps their refcounts into a new request's block table;
+  * on partial-block divergence (the request's tokens leave a cached
+    block's content mid-block, or the match is capped mid-block) the
+    request takes a private copy-on-write block covering the common
+    prefix — shared blocks are immutable, so nobody's view corrupts;
+  * cached refcount-0 blocks are *evictable*: ``num_free`` counts them,
+    which keeps the free-block signal the Balancer reads honest (a cached
+    block never blocks admission — allocation evicts LRU-first on demand).
 """
 from __future__ import annotations
 
+import hashlib
 import math
-from typing import Dict, List
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _chain(parent: bytes, tokens: np.ndarray) -> bytes:
+    """Chained content hash of one block: parent digest + token ids."""
+    return hashlib.blake2b(parent + np.ascontiguousarray(tokens).tobytes(),
+                           digest_size=16).digest()
+
+
+def _common_prefix_len(a: np.ndarray, b: np.ndarray) -> int:
+    m = min(len(a), len(b))
+    if m == 0:
+        return 0
+    eq = a[:m] == b[:m]
+    return m if eq.all() else int(np.argmax(~eq))
 
 
 class BlockAllocator:
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 prefix_cache: bool = False):
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.prefix_cache = prefix_cache
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._owned: Dict[str, List[int]] = {}
+        # --- prefix-cache state (all empty when prefix_cache is off) ----
+        self._ref: Dict[int, int] = {}            # block -> live refcount
+        self._lru: OrderedDict = OrderedDict()    # refcount-0 cached blocks
+        self._block_hash: Dict[int, bytes] = {}   # indexed block -> chain hash
+        self._hash_to_block: Dict[bytes, int] = {}
+        self._block_parent: Dict[int, bytes] = {}
+        self._block_tokens: Dict[int, np.ndarray] = {}
+        self._children: Dict[bytes, List[int]] = {}
+        # counters (benchmark / metrics surface)
+        self.n_prefix_hits = 0      # share_blocks calls that reused tokens
+        self.n_tokens_reused = 0    # prompt tokens whose prefill was skipped
+        self.n_cow_copies = 0       # partial-block divergence copies
+        self.n_evictions = 0        # cached blocks reclaimed for allocation
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        """Blocks available to allocate. Cached refcount-0 blocks count:
+        they are reclaimed LRU-first on demand, so the Balancer's
+        Algorithm-1 admission signal must treat them as free."""
+        return len(self._free) + len(self._lru)
 
     def blocks_needed(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.block_size)
@@ -28,11 +82,45 @@ class BlockAllocator:
     def can_allocate(self, n_tokens: int) -> bool:
         return self.blocks_needed(n_tokens) <= self.num_free
 
+    # ------------------------------------------------------------------
+    # block supply (free list first, then LRU eviction of cached blocks)
+    # ------------------------------------------------------------------
+    def _evict_lru(self, exclude: Optional[int] = None) -> None:
+        for b in self._lru:
+            if b != exclude:
+                self._deindex(b)
+                self._free.append(b)
+                self.n_evictions += 1
+                return
+        raise MemoryError("no evictable cached block")
+
+    def _deindex(self, b: int) -> None:
+        """Drop a block from the prefix index (eviction). Indexed
+        descendants keyed under its chain hash become unreachable to the
+        walk and simply age out of the LRU."""
+        self._lru.pop(b, None)
+        h = self._block_hash.pop(b)
+        del self._hash_to_block[h]
+        parent = self._block_parent.pop(b)
+        self._block_tokens.pop(b)
+        sibs = self._children[parent]
+        sibs.remove(b)
+        if not sibs:
+            del self._children[parent]
+
+    def _take_block(self, exclude: Optional[int] = None) -> int:
+        if not self._free:
+            self._evict_lru(exclude)
+        return self._free.pop()
+
     def allocate(self, req_id: str, n_tokens: int) -> List[int]:
         need = self.blocks_needed(n_tokens)
         if need > self.num_free:
             raise MemoryError(f"out of KV blocks: need {need}, free {self.num_free}")
-        blocks = [self._free.pop() for _ in range(need)]
+        blocks = [self._take_block() for _ in range(need)]
+        if self.prefix_cache:
+            for b in blocks:
+                self._ref[b] = 1
         self._owned.setdefault(req_id, []).extend(blocks)
         return blocks
 
@@ -53,20 +141,167 @@ class BlockAllocator:
         if extra > self.num_free:
             raise MemoryError(
                 f"out of KV blocks: need {extra}, free {self.num_free}")
-        blocks = [self._free.pop() for _ in range(extra)]
+        blocks = [self._take_block() for _ in range(extra)]
         if blocks:
+            if self.prefix_cache:
+                for b in blocks:
+                    self._ref[b] = 1
             self._owned.setdefault(req_id, []).extend(blocks)
         return blocks
 
-    def free(self, req_id: str) -> None:
+    def free(self, req_id: str,
+             cache_tokens: Optional[np.ndarray] = None) -> None:
+        """Release a request's blocks. With prefix caching, pass the token
+        ids the blocks hold (prompt + generated) to register their content
+        in the prefix index before the refcounts drop: refcount-0 indexed
+        blocks are retained in the LRU cache, everything else returns to
+        the free list. Without ``cache_tokens`` (preemption, or caching
+        off) nothing is registered."""
         blocks = self._owned.pop(req_id, [])
-        self._free.extend(blocks)
+        if not self.prefix_cache:
+            self._free.extend(blocks)
+            return
+        if cache_tokens is not None and blocks:
+            self._register(blocks, np.asarray(cache_tokens, np.int32))
+        for b in blocks:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                if b in self._block_hash:
+                    self._lru[b] = None           # retained, MRU end
+                else:
+                    self._free.append(b)
+
+    # ------------------------------------------------------------------
+    # prefix index
+    # ------------------------------------------------------------------
+    def _register(self, blocks: List[int], tokens: np.ndarray) -> None:
+        """Index each block of a released sequence under its chain hash
+        (full blocks, plus the partial tail — divergence from a partial
+        block is served by copy-on-write). First registration of a given
+        content wins; a block whose hash is already mapped elsewhere stays
+        unindexed and frees normally."""
+        h = b""
+        for i, blk in enumerate(blocks):
+            lo = i * self.block_size
+            hi = min(lo + self.block_size, len(tokens))
+            if hi <= lo:
+                break
+            parent, h = h, _chain(h, tokens[lo:hi])
+            if blk in self._block_hash:
+                continue            # already indexed (shared prefix block)
+            if h in self._hash_to_block:
+                continue            # duplicate content; existing entry wins
+            self._block_hash[blk] = h
+            self._hash_to_block[h] = blk
+            self._block_parent[blk] = parent
+            self._block_tokens[blk] = tokens[lo:hi].copy()
+            self._children.setdefault(parent, []).append(blk)
+
+    def _match_prefix(self, tokens: np.ndarray, max_tokens: Optional[int]):
+        """The single source of truth both ``lookup_prefix`` (read-only
+        promise) and ``share_blocks`` (placement) use: walk the full-block
+        hash chain, then find the best common prefix into one cached block
+        past the divergence point. Returns ``(full_blocks, n_full, src,
+        src_len)`` — matched block ids, tokens they cover, and the CoW
+        source block (with its matched token count), if any."""
+        tokens = np.asarray(tokens, np.int32)
+        limit = len(tokens) if max_tokens is None else min(max_tokens,
+                                                           len(tokens))
+        full: List[int] = []
+        n, h = 0, b""
+        while n + self.block_size <= limit:
+            h2 = _chain(h, tokens[n:n + self.block_size])
+            blk = self._hash_to_block.get(h2)
+            if blk is None:
+                break
+            full.append(blk)
+            n, h = n + self.block_size, h2
+        src, src_len = None, 0
+        for b in self._children.get(h, ()):
+            k = _common_prefix_len(tokens[n:limit], self._block_tokens[b])
+            if k > src_len:
+                src, src_len = b, k
+        return full, n, src, src_len
+
+    def lookup_prefix(self, tokens: np.ndarray,
+                      max_tokens: Optional[int] = None) -> int:
+        """Tokens of ``tokens`` whose KV is reusable from the cache right
+        now: the longest full-block hash-chain match, plus the longest
+        common prefix into one cached block past it (served by CoW at
+        share time). Read-only — used by planners and affinity routers."""
+        if not self.prefix_cache:
+            return 0
+        _, n, _, src_len = self._match_prefix(tokens, max_tokens)
+        return n + src_len
+
+    def share_blocks(self, req_id: str, tokens: np.ndarray,
+                     max_tokens: Optional[int] = None) -> int:
+        """Seed a new request's block table from the prefix cache: bump
+        refcounts on every fully-matched block, and on partial-block
+        divergence take a copy-on-write block holding the common prefix
+        (skipped when no block is available for the copy). Returns the
+        number of prompt tokens whose prefill is thereby skipped. Must be
+        called before the request owns any blocks."""
+        if not self.prefix_cache:
+            return 0
+        assert not self._owned.get(req_id), "share_blocks before allocate"
+        full, n, src, src_len = self._match_prefix(tokens, max_tokens)
+        table: List[int] = []
+        for blk in full:
+            if blk not in self._ref:
+                self._lru.pop(blk)                # resurrect from cache
+                self._ref[blk] = 0
+            self._ref[blk] += 1
+            table.append(blk)
+        if src is not None and src_len > 0:
+            # partial-block divergence -> copy-on-write
+            spare = self.num_free - (1 if src in self._lru else 0)
+            if spare >= 1:
+                cow = self._take_block(exclude=src)
+                self._ref[cow] = 1
+                table.append(cow)
+                n += src_len
+                self.n_cow_copies += 1
+        if table:
+            self._owned[req_id] = table
+        if n > 0:
+            self.n_prefix_hits += 1
+            self.n_tokens_reused += n
+        return n
 
     def block_table(self, req_id: str) -> List[int]:
         return list(self._owned.get(req_id, []))
 
     def check_invariants(self) -> None:
         owned = [b for bs in self._owned.values() for b in bs]
-        assert len(owned) == len(set(owned)), "double-allocated block"
-        assert len(owned) + len(self._free) == self.num_blocks, "leaked blocks"
-        assert not (set(owned) & set(self._free)), "block both owned and free"
+        if not self.prefix_cache:
+            assert len(owned) == len(set(owned)), "double-allocated block"
+            assert len(owned) + len(self._free) == self.num_blocks, \
+                "leaked blocks"
+            assert not (set(owned) & set(self._free)), \
+                "block both owned and free"
+            return
+        # refcount-consistent accounting: every block is exactly one of
+        # owned (ref >= 1), cached (ref 0, indexed, in LRU), or free
+        for bs in self._owned.values():
+            assert len(bs) == len(set(bs)), "block twice in one table"
+        counts: Dict[int, int] = {}
+        for b in owned:
+            counts[b] = counts.get(b, 0) + 1
+        assert counts == self._ref, \
+            f"refcounts disagree with block tables: {counts} vs {self._ref}"
+        owned_set, lru_set, free_set = (set(counts), set(self._lru),
+                                        set(self._free))
+        assert not owned_set & lru_set, "owned block in LRU cache"
+        assert not owned_set & free_set, "block both owned and free"
+        assert not lru_set & free_set, "block both cached and free"
+        assert len(owned_set | lru_set | free_set) == self.num_blocks, \
+            "leaked blocks"
+        for b in lru_set:
+            assert b in self._block_hash, "unindexed block retained in LRU"
+        assert set(self._block_hash) == set(self._hash_to_block.values())
+        for b, h in self._block_hash.items():
+            assert self._hash_to_block[h] == b, "index maps disagree"
+            assert b in self._block_tokens and b in self._block_parent
+            assert b in self._children[self._block_parent[b]]

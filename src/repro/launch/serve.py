@@ -19,6 +19,12 @@ Examples:
       --cluster "2xcronus:A100+A10,4xworker:A10@sjf" \
       --router least_loaded --n-requests 2000
 
+  # shared-prefix workload with block-level KV reuse and prefix-affinity
+  # routing (requests chase the endpoint already holding their prefix):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+      --cluster "4xworker:A10" --prefix-cache --router prefix_affinity \
+      --trace shared_prefix --n-requests 1000
+
   # functional run with real JAX execution on reduced config:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
       --approach cronus --n-requests 8 --real --scale 0.02
@@ -38,7 +44,7 @@ from repro.models import build_model
 from repro.scheduling import SCHEDULERS
 from repro.serving.hardware import DEVICES
 from repro.serving.simulator import APPROACHES, build_system
-from repro.serving.trace import make_trace
+from repro.serving.trace import make_shared_prefix_trace, make_trace
 
 
 def main():
@@ -61,6 +67,20 @@ def main():
     ap.add_argument("--sessions", type=int, default=0,
                     help="tag requests with this many conversation ids "
                          "(session-affinity routing)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix KV reuse (refcounted copy-on-write "
+                         "block cache); per-endpoint override via '@cache' "
+                         "in --cluster. Simulation-only: not valid with "
+                         "--real, whose slot cache holds no cached prefix")
+    ap.add_argument("--trace", default="azure",
+                    choices=("azure", "shared_prefix"),
+                    help="workload shape: the Azure-conversation trace, or "
+                         "the multi-tenant shared-prefix trace where "
+                         "--prefix-cache pays off")
+    ap.add_argument("--prefix-groups", type=int, default=8,
+                    help="shared_prefix trace: number of distinct prefixes")
+    ap.add_argument("--prefix-len", type=int, default=512,
+                    help="shared_prefix trace: tokens per shared prefix")
     ap.add_argument("--n-requests", type=int, default=1000)
     ap.add_argument("--interval", type=float, default=0.0,
                     help="arrival interval (s); 0 = all at t0 (max tput)")
@@ -75,9 +95,20 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    reqs = make_trace(args.n_requests, seed=args.seed, interval=args.interval,
-                      vocab_size=cfg.vocab_size, scale=args.scale,
-                      sessions=args.sessions or None)
+    if args.trace == "shared_prefix":
+        reqs = make_shared_prefix_trace(
+            args.n_requests, seed=args.seed, interval=args.interval,
+            n_prefixes=args.prefix_groups, prefix_len=args.prefix_len,
+            vocab_size=cfg.vocab_size, scale=args.scale)
+    else:
+        reqs = make_trace(args.n_requests, seed=args.seed,
+                          interval=args.interval, vocab_size=cfg.vocab_size,
+                          scale=args.scale, sessions=args.sessions or None)
+    if args.real and (args.prefix_cache or "@cache" in (args.cluster or "")):
+        raise SystemExit("prefix caching (--prefix-cache / '@cache' node "
+                         "suffix) models KV reuse at the block-table level; "
+                         "the RealExecutor's slot cache cannot serve cached "
+                         "prefixes, so it is simulation-only")
 
     if args.real:
         model = build_model(cfg, exact_moe=True)
@@ -94,11 +125,13 @@ def main():
 
     if args.cluster:
         system = build_cluster(cfg, args.cluster, router=args.router,
-                               sched_policy=args.sched_policy, **ex_kw)
+                               sched_policy=args.sched_policy,
+                               prefix_cache=args.prefix_cache, **ex_kw)
     else:
         system = build_system(args.approach, cfg, DEVICES[args.hi],
                               DEVICES[args.lo],
-                              sched_policy=args.sched_policy, **ex_kw)
+                              sched_policy=args.sched_policy,
+                              prefix_cache=args.prefix_cache, **ex_kw)
     metrics = system.run(reqs)
     print(json.dumps(metrics, indent=2))
     if args.out:

@@ -13,7 +13,6 @@ Sharding policy (see DESIGN.md §4):
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,7 +111,8 @@ def _cache_shardings(model, cfg, mesh, shape, s_kv, multi_pod,
     abstract = jax.eval_shape(
         functools.partial(model.init_cache, shape.global_batch, s_kv))
     return jax.tree_util.tree_map_with_path(
-        lambda p, l: NamedSharding(mesh, divisible_spec(spec(p, l), l.shape, mesh)),
+        lambda p, leaf: NamedSharding(
+            mesh, divisible_spec(spec(p, leaf), leaf.shape, mesh)),
         abstract), abstract
 
 

@@ -192,7 +192,7 @@ def blocked_gqa_attend(q, k, v, q_pos, kv_pos, window, scale,
     kpb = jnp.moveaxis(kv_pos.reshape(b, nk, bk), 1, 0)       # [nk,B,bk]
 
     def kv_step(carry, inp):
-        m, l, acc = carry            # m,l [B,nq,Kv,g,bq]; acc [...,bq,D]
+        m, lse, acc = carry          # m,lse [B,nq,Kv,g,bq]; acc [...,bq,D]
         kblk, vblk, kp = inp
         s = jnp.einsum("bnqkgd,bskd->bnkgqs", qb, kblk,
                        preferred_element_type=jnp.float32) * scale
@@ -205,7 +205,7 @@ def blocked_gqa_attend(q, k, v, q_pos, kv_pos, window, scale,
         m_new = jnp.maximum(m, m_cur)
         p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p, axis=-1)
+        l_new = lse * alpha + jnp.sum(p, axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bnkgqs,bskd->bnkgqd", p.astype(vblk.dtype), vblk,
             preferred_element_type=jnp.float32)
@@ -214,8 +214,9 @@ def blocked_gqa_attend(q, k, v, q_pos, kv_pos, window, scale,
     m0 = jnp.full((b, nq, kvh, g, bq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, nq, kvh, g, bq), jnp.float32)
     a0 = jnp.zeros((b, nq, kvh, g, bq, dh), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb))
-    safe = jnp.where(l == 0.0, 1.0, l)
+    (m, lse, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                    (kb, vb, kpb))
+    safe = jnp.where(lse == 0.0, 1.0, lse)
     out = acc / safe[..., None]                               # [B,nq,Kv,g,bq,D]
     out = jnp.moveaxis(out, 4, 2).reshape(b, nq * bq, h, dh)
     return out[:, :sq].astype(q.dtype)

@@ -74,15 +74,15 @@ class EncDecModel:
     def init_cache(self, batch: int, s_kv: int, s_enc: Optional[int] = None):
         cfg = self.cfg
         s_enc = s_enc or cfg.enc_seq_len
-        kvh, hd, l = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+        kvh, hd, nl = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
         return {
             "pos": jnp.full((batch, s_kv), -1, jnp.int32),
             "stack": {
-                "k": jnp.zeros((l, batch, s_kv, kvh, hd), self.dtype),
-                "v": jnp.zeros((l, batch, s_kv, kvh, hd), self.dtype),
+                "k": jnp.zeros((nl, batch, s_kv, kvh, hd), self.dtype),
+                "v": jnp.zeros((nl, batch, s_kv, kvh, hd), self.dtype),
             },
-            "cross_k": jnp.zeros((l, batch, s_enc, kvh, hd), self.dtype),
-            "cross_v": jnp.zeros((l, batch, s_enc, kvh, hd), self.dtype),
+            "cross_k": jnp.zeros((nl, batch, s_enc, kvh, hd), self.dtype),
+            "cross_v": jnp.zeros((nl, batch, s_enc, kvh, hd), self.dtype),
         }
 
     # ------------------------------------------------------------------

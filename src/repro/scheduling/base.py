@@ -214,6 +214,22 @@ class Scheduler(abc.ABC):
             free_blocks -= need
         return admit
 
+    def planned_prefill_remaining(self, view: SchedulerView,
+                                  req: Request) -> int:
+        """``prefill_remaining`` as it will stand after this iteration's
+        placement: a request admitted from the queue may start past
+        context 0 via a prefix-cache hit (the engine seeds its block
+        table from the cache in ``_place``), so only the uncached tail
+        needs token budget. Read-only probe; without prefix caching this
+        is exactly ``prefill_remaining``."""
+        rem = req.prefill_remaining
+        if (req.state is ReqState.WAITING and req.context_len == 0
+                and req.kv_payload is None and req.input_len > 1
+                and getattr(view.allocator, "prefix_cache", False)):
+            rem -= view.allocator.lookup_prefix(
+                req.prompt, max_tokens=req.input_len - 1)
+        return max(rem, 0)
+
     def pack_prefill(self, view: SchedulerView, residents: List[Request],
                      decode: List[Request]) -> List[PrefillChunk]:
         """Fill the token budget left by decodes with prefill chunks —
@@ -227,7 +243,7 @@ class Scheduler(abc.ABC):
         for r in self.prefill_order(cands):
             if budget <= 0:
                 break
-            n = min(r.prefill_remaining, budget)
+            n = min(self.planned_prefill_remaining(view, r), budget)
             if n <= 0:
                 continue
             chunks.append(PrefillChunk(r, n))

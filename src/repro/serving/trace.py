@@ -50,3 +50,40 @@ def make_trace(n_requests: int = 1000, *, seed: int = 0,
                             session=(f"s{i % sessions}" if sessions
                                      else None)))
     return reqs
+
+
+def make_shared_prefix_trace(n_requests: int = 1000, *, seed: int = 0,
+                             interval: float = 0.0,
+                             n_prefixes: int = 8,
+                             prefix_len: int = 512,
+                             mean_suffix_in: float = 256,
+                             mean_out: float = AZURE_CONV_MEAN_OUT,
+                             max_in: int = 4096, max_out: int = 1024,
+                             vocab_size: int = 32000,
+                             scale: float = 1.0) -> List[Request]:
+    """Multi-tenant shared-prefix workload: each request opens with one of
+    ``n_prefixes`` common prefixes (system prompt / few-shot template) of
+    ``prefix_len`` tokens, followed by a log-normal unique suffix. The
+    prefix id doubles as the session tag, so session- and prefix-affinity
+    routers can chase KV locality. This is the workload where block-level
+    prefix caching pays: without it every request re-prefills its
+    template."""
+    rng = np.random.default_rng(seed)
+    p_len = max(int(prefix_len * scale), 2)
+    prefixes = [rng.integers(0, vocab_size, p_len).astype(np.int32)
+                for _ in range(n_prefixes)]
+    sfx = synth_lengths(n_requests, mean_suffix_in * scale, 1.0, rng,
+                        max(int(4 * scale), 2), int(max_in * scale))
+    outs = synth_lengths(n_requests, mean_out * scale, 0.6, rng,
+                         max(int(2 * scale), 1), int(max_out * scale))
+    groups = rng.integers(0, n_prefixes, n_requests)
+    reqs = []
+    for i in range(n_requests):
+        g = int(groups[i])
+        suffix = rng.integers(0, vocab_size, sfx[i]).astype(np.int32)
+        reqs.append(Request(req_id=f"r{i}",
+                            prompt=np.concatenate([prefixes[g], suffix]),
+                            output_len=int(outs[i]),
+                            arrival=i * interval,
+                            session=f"p{g}"))
+    return reqs

@@ -6,7 +6,7 @@ would write its addressable shards; here (single host) we write full arrays.
 from __future__ import annotations
 
 import os
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import numpy as np

@@ -3,7 +3,7 @@ with local structure), sharded global batches, and whisper-style
 (embedding, token) pairs for the enc-dec / frontend-stub architectures."""
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Optional
 
 import numpy as np
 

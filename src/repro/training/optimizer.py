@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,8 @@ def cosine_lr(cfg: AdamWConfig, step):
 
 
 def init_adamw(params) -> dict:
-    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
     return {
         "step": jnp.zeros((), jnp.int32),
         "m": jax.tree.map(zeros, params),
@@ -38,8 +38,8 @@ def init_adamw(params) -> dict:
 
 def _global_norm(tree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def adamw_update(cfg: AdamWConfig, params, grads, state):

@@ -1,11 +1,12 @@
 """Subprocess check: shard_map expert-parallel MoE dispatch (§Perf HC1-2)
 matches the dense all-experts oracle on a real 2x2 device mesh."""
-import os, sys
+import os
+import sys
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=4")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+import jax
+import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models.moe import init_moe, moe_block, moe_block_dense_ref
 from repro.models import sharding as shmod

@@ -113,6 +113,39 @@ def test_session_lookahead_avoids_convoying():
     assert {r.req_id for r in b.engine.queue} == {"r2", "r3"}
 
 
+def test_session_rebalances_after_repeated_stalls():
+    """Regression: a session used to stay pinned to its home endpoint
+    FOREVER, even one that never frees up — its requests would defer
+    eternally. After ``max_stalls`` consecutive rejections the session
+    must re-pin through the fallback policy."""
+    a, b = _worker("a", 4096, queue_cap=1), _worker("b", 1024, queue_cap=8)
+    router = SessionAffinityRouter(max_stalls=3)
+    assert router.select(_req("r0", session="s1"), [a, b]) is a
+    a.engine.add_request(_req("q0"))          # home full, and it stays full
+    for i in range(router.max_stalls):        # tolerated stalls: wait
+        assert router.select(_req(f"r{i+1}", session="s1"), [a, b]) is None
+    # one more rejection crosses the threshold: the session migrates to b
+    moved = router.select(_req("rX", session="s1"), [a, b])
+    assert moved is b
+    # ...and the new pin sticks on later selects
+    assert router.select(_req("rY", session="s1"), [a, b]) is b
+
+
+def test_session_rebalances_away_from_overloaded_home():
+    """Staleness escape hatch: a home endpoint that is drastically more
+    loaded than the best alternative loses the pin immediately — KV
+    locality is not worth an unbounded queue."""
+    a, b = _worker("a", 4096, queue_cap=None), _worker("b", 1024,
+                                                      queue_cap=None)
+    router = SessionAffinityRouter(imbalance=4.0)
+    assert router.select(_req("r0", session="s1"), [a, b]) is a
+    for i in range(6):                        # 6 > 4.0 * (0 + 1)
+        a.engine.add_request(_req(f"q{i}"))
+    moved = router.select(_req("r1", session="s1"), [a, b])
+    assert moved is b
+    assert router.select(_req("r2", session="s1"), [a, b]) is b
+
+
 def test_make_router_registry():
     assert isinstance(make_router("least_loaded"), LeastLoadedRouter)
     with pytest.raises(KeyError):

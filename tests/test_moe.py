@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, smoke_variant
+from repro.configs import get_config
 from repro.models.moe import init_moe, moe_block, moe_block_dense_ref
 
 KEY = jax.random.PRNGKey(0)

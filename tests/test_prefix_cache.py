@@ -1,0 +1,391 @@
+"""Shared-prefix KV reuse: refcounted copy-on-write block cache.
+
+Covers the allocator invariants (hypothesis property tests over random
+share -> CoW -> free round-trips, with ``check_invariants`` asserting
+refcount-consistent free-list accounting after every op), the engine path
+(prefix hits skip prefill chunks and improve TTFT deterministically), the
+prefix-affinity router, and the cache-off bit-identity guard (no new
+metric keys, allocator behaviour unchanged)."""
+import copy
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in the CI image; see _hypothesis_compat
+    from _hypothesis_compat import given, settings, st
+
+from repro.cluster import build_cluster, parse_cluster_spec
+from repro.cluster.router import PrefixAffinityRouter
+from repro.cluster.runtime import ClusterRuntime, WorkerEndpoint
+from repro.configs import get_config
+from repro.core.engine import Engine, EngineConfig
+from repro.core.executor import NullExecutor
+from repro.core.metrics import RequestMetrics, aggregate
+from repro.core.request import Request
+from repro.kvcache import BlockAllocator
+from repro.serving.hardware import A10, DeviceModel
+from repro.serving.trace import make_shared_prefix_trace
+
+CFG = get_config("llama3-8b")
+
+BS = 4
+# three prefix families sharing sub-prefixes pairwise, so random traffic
+# exercises full-block matches, mid-block divergence (CoW) and misses
+_FAMILIES = [
+    np.arange(0, 24, dtype=np.int32),                  # 6 full blocks
+    np.concatenate([np.arange(0, 10, dtype=np.int32),  # diverges mid-block 2
+                    np.arange(100, 114, dtype=np.int32)]),
+    np.arange(1000, 1010, dtype=np.int32),             # 2.5 blocks, disjoint
+]
+
+
+def _tokens(fam: int, n_suffix: int, salt: int) -> np.ndarray:
+    sfx = (np.arange(n_suffix, dtype=np.int32) + 10_000 + salt * 997) % 30000
+    return np.concatenate([_FAMILIES[fam % len(_FAMILIES)], sfx])
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants under share -> CoW -> free round-trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["admit", "grow", "finish",
+                                           "abort"]),
+                          st.integers(0, 5), st.integers(0, 2),
+                          st.integers(1, 60)),
+                min_size=1, max_size=70))
+def test_share_cow_free_roundtrips(ops):
+    """The full prefix-cache lifecycle the engine drives: admit via
+    ``share_blocks`` (refcount bumps + CoW on partial divergence), grow
+    via ``extend_to``, then either register the sequence in the cache
+    (finish) or drop it unregistered (abort/preempt). Refcount-consistent
+    accounting must hold after every step."""
+    a = BlockAllocator(num_blocks=48, block_size=BS, prefix_cache=True)
+    live = {}
+    salt = 0
+    for op, rid_i, fam, n in ops:
+        rid = f"r{rid_i}"
+        if op == "admit" and rid not in live:
+            salt += 1
+            tokens = _tokens(fam, n, salt)
+            shared = a.share_blocks(rid, tokens,
+                                    max_tokens=len(tokens) - 1)
+            assert 0 <= shared <= len(tokens) - 1
+            # shared tokens really are a cached prefix: the index only
+            # ever holds content previously registered via free()
+            if a.can_extend_to(rid, len(tokens)):
+                a.extend_to(rid, len(tokens))
+                live[rid] = tokens
+            else:
+                a.free(rid)             # admission rollback, unregistered
+        elif op == "grow" and rid in live:
+            tokens = np.concatenate([live[rid],
+                                     _tokens(fam, n, salt)[:n]])
+            if a.can_extend_to(rid, len(tokens)):
+                a.extend_to(rid, len(tokens))
+                live[rid] = tokens
+            else:                       # preemption-by-recompute
+                a.free(rid)
+                del live[rid]
+        elif op == "finish" and rid in live:
+            a.free(rid, cache_tokens=live.pop(rid))
+        elif op == "abort" and rid in live:
+            a.free(rid)
+            del live[rid]
+        a.check_invariants()
+    for rid, tokens in live.items():
+        a.free(rid, cache_tokens=tokens)
+        a.check_invariants()
+    # every block is free or retained-but-evictable: nothing leaked
+    assert a.num_free == a.num_blocks
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 40), st.integers(0, 30))
+def test_share_matches_are_true_prefixes(n_prefix, n_a, n_b):
+    """Whatever share_blocks claims as reused must be an exact token
+    match against what was previously registered."""
+    a = BlockAllocator(num_blocks=64, block_size=BS, prefix_cache=True)
+    first = np.concatenate([np.arange(n_prefix, dtype=np.int32),
+                            np.full(n_a, 7, np.int32)])
+    a.allocate("r1", len(first))
+    a.free("r1", cache_tokens=first)
+    second = np.concatenate([np.arange(n_prefix, dtype=np.int32),
+                             np.full(n_b, 9, np.int32)])
+    shared = a.share_blocks("r2", second, max_tokens=len(second) - 1)
+    assert np.array_equal(second[:shared], first[:shared])
+    a.extend_to("r2", len(second))
+    a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# allocator unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_full_and_partial_tail_reuse_with_cow():
+    a = BlockAllocator(num_blocks=16, block_size=BS, prefix_cache=True)
+    p1 = np.arange(10, dtype=np.int32)          # 2 full blocks + 2 partial
+    a.allocate("r1", 10)
+    a.free("r1", cache_tokens=p1)
+    assert a.num_free == 16                      # cached blocks count free
+    assert a.lookup_prefix(p1) == 10
+    n = a.share_blocks("r2", p1, max_tokens=9)   # cap lands mid-partial
+    assert n == 9
+    assert a.n_cow_copies == 1                   # partial tail was copied
+    a.check_invariants()
+
+
+def test_mid_block_divergence_cow():
+    a = BlockAllocator(num_blocks=16, block_size=BS, prefix_cache=True)
+    p1 = np.arange(10, dtype=np.int32)
+    a.allocate("r1", 10)
+    a.free("r1", cache_tokens=p1)
+    p2 = np.concatenate([p1[:6], np.int32([50, 51, 52, 53])])
+    assert a.lookup_prefix(p2) == 6              # 1 full block + 2 in-block
+    n = a.share_blocks("r3", p2)
+    assert n == 6 and a.n_cow_copies == 1
+    a.check_invariants()
+
+
+def test_shared_blocks_are_refcounted_not_copied():
+    a = BlockAllocator(num_blocks=16, block_size=BS, prefix_cache=True)
+    p = np.arange(8, dtype=np.int32)             # exactly 2 full blocks
+    a.allocate("r1", 8)
+    a.free("r1", cache_tokens=p)
+    used0 = a.num_blocks - len(a._free)
+    a.share_blocks("r2", np.concatenate([p, p]), max_tokens=8)
+    a.share_blocks("r3", np.concatenate([p, p]), max_tokens=8)
+    # both requests reference the same two physical blocks
+    assert a.block_table("r2") == a.block_table("r3")
+    assert a.num_blocks - len(a._free) == used0
+    a.check_invariants()
+    a.free("r2")
+    a.check_invariants()
+    a.free("r3")
+    a.check_invariants()
+    assert a.num_free == a.num_blocks
+
+
+def test_eviction_honors_free_block_signal():
+    """The Balancer reads ``num_free`` (Alg. 1): cached refcount-0 blocks
+    must count as free and allocation must reclaim them LRU-first."""
+    a = BlockAllocator(num_blocks=4, block_size=BS, prefix_cache=True)
+    a.allocate("x", 16)
+    a.free("x", cache_tokens=np.arange(16, dtype=np.int32))
+    assert a.num_free == 4
+    assert a.can_allocate(16)
+    a.allocate("y", 16)                          # must evict every block
+    assert a.n_evictions == 4
+    assert a.lookup_prefix(np.arange(16, dtype=np.int32)) == 0
+    a.check_invariants()
+
+
+def test_prefix_cache_off_is_bit_identical_allocator():
+    """With caching off the allocator is the seed allocator: same free
+    list order, no refcounts, free() returns blocks immediately."""
+    a = BlockAllocator(num_blocks=8, block_size=BS)
+    b = BlockAllocator(num_blocks=8, block_size=BS, prefix_cache=False)
+    for alloc in (a, b):
+        alloc.allocate("r", 10)
+        assert alloc.share_blocks is not None    # API exists
+        assert alloc.lookup_prefix(np.arange(10, dtype=np.int32)) == 0
+        alloc.free("r", cache_tokens=np.arange(10, dtype=np.int32))
+        assert alloc.num_free == 8
+    assert a._free == b._free
+
+
+# ---------------------------------------------------------------------------
+# engine path: prefix hits skip prefill work
+# ---------------------------------------------------------------------------
+
+def _run_worker(reqs, cache: bool, max_slots: int = 4):
+    eng = Engine("w", CFG,
+                 EngineConfig(max_slots=max_slots, num_kv_blocks=4096,
+                              prefix_cache=cache),
+                 DeviceModel(A10, CFG), NullExecutor())
+    rt = ClusterRuntime([WorkerEndpoint("w", eng, queue_cap=None)],
+                        PrefixAffinityRouter())
+    m = rt.run([copy.deepcopy(r) for r in reqs])
+    return m, eng
+
+
+def test_engine_prefix_hits_shorten_prefill_and_ttft():
+    reqs = make_shared_prefix_trace(40, seed=0, interval=0.02,
+                                    n_prefixes=2, prefix_len=512,
+                                    mean_suffix_in=64, mean_out=16,
+                                    max_out=32)
+    m_off, _ = _run_worker(reqs, cache=False)
+    m_on, eng = _run_worker(reqs, cache=True)
+    assert m_on["completed"] == m_off["completed"] == len(reqs)
+    assert m_on["prefill_tokens_saved"] > 0
+    assert 0 < m_on["prefix_cache_hit_rate"] <= 1.5
+    assert m_on["ttft_p99"] < m_off["ttft_p99"]
+    assert eng.allocator.n_prefix_hits > 0
+    eng.allocator.check_invariants()
+    # the cache-off run's dict carries no cache keys (seed byte-identity)
+    assert "prefill_tokens_saved" not in m_off
+    assert "prefix_cache_hit_rate" not in m_off
+
+
+def test_generated_tokens_enter_the_cache():
+    """Multi-turn reuse: a follow-up whose prompt extends turn 1's full
+    sequence (prompt + generated) reuses it from the cache."""
+    eng = Engine("w", CFG,
+                 EngineConfig(max_slots=2, num_kv_blocks=512,
+                              prefix_cache=True, block_size=4),
+                 DeviceModel(A10, CFG), NullExecutor())
+    turn1 = Request(req_id="t1", prompt=np.arange(40, dtype=np.int32),
+                    output_len=8)
+    eng.add_request(turn1)
+    for _ in range(200):
+        if turn1.done:
+            break
+        eng.step()
+    seq1 = np.concatenate([turn1.prompt,
+                           np.asarray(turn1.generated, np.int32)])
+    assert eng.allocator.lookup_prefix(seq1) == len(seq1)
+    turn2 = Request(req_id="t2",
+                    prompt=np.concatenate([seq1,
+                                           np.arange(900, 912,
+                                                     dtype=np.int32)]),
+                    output_len=4)
+    eng.add_request(turn2)
+    for _ in range(200):
+        if turn2.done:
+            break
+        eng.step()
+    assert turn2.done
+    assert turn2.metrics.cached_prefix_tokens >= len(seq1) - BS
+    eng.allocator.check_invariants()
+
+
+def test_cpi_handoff_shares_beyond_partial():
+    """A Cronus handoff arrives mid-prompt (kv_payload covers the PPI's
+    partial). When the CPI's cache holds a longer prefix, sharing must
+    advance context past the partial — the chunked remainder shrinks."""
+    eng = Engine("cpi", CFG,
+                 EngineConfig(max_slots=2, num_kv_blocks=512,
+                              prefix_cache=True, block_size=4),
+                 DeviceModel(A10, CFG), NullExecutor())
+    prompt = np.arange(64, dtype=np.int32)
+    # warm the CPI cache with a finished request over the same prefix
+    warm = Request(req_id="warm", prompt=prompt.copy(), output_len=2)
+    eng.add_request(warm)
+    for _ in range(100):
+        if warm.done:
+            break
+        eng.step()
+    # hand off a same-prefix request whose PPI partial covers 16 tokens
+    hand = Request(req_id="h", prompt=np.concatenate(
+        [prompt, np.arange(700, 708, dtype=np.int32)]), output_len=2)
+    hand.partial_len = 16
+    hand.context_len = 16
+    hand.kv_payload = {"_null": 16}
+    eng.add_request(hand)
+    for _ in range(100):
+        if hand.done:
+            break
+        eng.step()
+    assert hand.done
+    # shared well past the handed-off partial (cap: input_len - 1)
+    assert hand.metrics.cached_prefix_tokens >= 64 - 16 - BS
+    eng.allocator.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# metrics / aggregate
+# ---------------------------------------------------------------------------
+
+def test_aggregate_emits_cache_keys_only_on_hits():
+    rm = RequestMetrics("r0", 0.0, 100, 4, first_token_time=1.0,
+                        finish_time=2.0, token_times=[1.5, 2.0])
+    base = aggregate([rm])
+    assert "prefill_tokens_saved" not in base
+    rm.cached_prefix_tokens = 64
+    out = aggregate([rm])
+    assert out["prefill_tokens_saved"] == 64
+    assert out["prefix_cache_hit_rate"] == pytest.approx(0.64)
+    # the shared keys are appended; the seed keys are untouched
+    assert {k: v for k, v in out.items()
+            if k not in ("prefill_tokens_saved",
+                         "prefix_cache_hit_rate")} == base
+
+
+# ---------------------------------------------------------------------------
+# cluster wiring: DSL flag + prefix-affinity router
+# ---------------------------------------------------------------------------
+
+def test_dsl_cache_suffix_and_builder_threading():
+    spec = parse_cluster_spec("2xworker:A10@sarathi@cache,cronus:A100+A10")
+    assert spec.nodes[0].options == {"sched_policy": "sarathi",
+                                     "prefix_cache": True}
+    assert spec.nodes[1].options == {}
+    system = build_cluster(CFG, spec)
+    assert all(e.allocator.prefix_cache
+               for ep in system.endpoints[:2] for e in ep.engines)
+    assert not any(e.allocator.prefix_cache
+                   for e in system.endpoints[2].engines)
+    with pytest.raises(ValueError):
+        parse_cluster_spec("worker:A10@bogus")
+
+
+def test_prefix_affinity_routes_to_cached_endpoint():
+    def worker(name):
+        eng = Engine(name, CFG,
+                     EngineConfig(max_slots=8, num_kv_blocks=1024,
+                                  prefix_cache=True),
+                     DeviceModel(A10, CFG), NullExecutor())
+        return WorkerEndpoint(name, eng, queue_cap=None)
+
+    a, b = worker("a"), worker("b")
+    prompt = np.arange(64, dtype=np.int32)
+    # warm b's cache with the prefix
+    b.engine.allocator.allocate("seed", 64)
+    b.engine.allocator.free("seed", cache_tokens=prompt)
+    router = PrefixAffinityRouter()
+    req = Request(req_id="r0", prompt=np.concatenate(
+        [prompt, np.arange(500, 520, dtype=np.int32)]), output_len=4)
+    assert router.select(req, [a, b]) is b
+    # a cache-cold request falls back to least-loaded (most free blocks)
+    cold = Request(req_id="r1",
+                   prompt=np.arange(9000, 9064, dtype=np.int32),
+                   output_len=4)
+    assert router.select(cold, [a, b]) is not None
+
+
+def test_prefix_affinity_respects_load_guard():
+    def worker(name, cap=None):
+        eng = Engine(name, CFG,
+                     EngineConfig(max_slots=8, num_kv_blocks=1024,
+                                  prefix_cache=True),
+                     DeviceModel(A10, CFG), NullExecutor())
+        return WorkerEndpoint(name, eng, queue_cap=cap)
+
+    hot, cold = worker("hot"), worker("cold")
+    prompt = np.arange(64, dtype=np.int32)
+    hot.engine.allocator.allocate("seed", 64)
+    hot.engine.allocator.free("seed", cache_tokens=prompt)
+    for i in range(8):   # hot endpoint is deeply backed up
+        hot.engine.add_request(Request(req_id=f"q{i}",
+                                       prompt=np.zeros(8, np.int32),
+                                       output_len=2))
+    router = PrefixAffinityRouter(max_imbalance=4)
+    req = Request(req_id="r0", prompt=np.concatenate(
+        [prompt, np.arange(500, 520, dtype=np.int32)]), output_len=4)
+    assert router.select(req, [hot, cold]) is cold
+
+
+def test_cluster_end_to_end_under_prefix_affinity():
+    reqs = make_shared_prefix_trace(60, seed=3, interval=0.05,
+                                    n_prefixes=4, prefix_len=256,
+                                    mean_suffix_in=64, mean_out=16,
+                                    max_out=32)
+    system = build_cluster(CFG, "2xworker:A10@cache",
+                           router="prefix_affinity", max_slots=8)
+    m = system.run([copy.deepcopy(r) for r in reqs])
+    assert m["completed"] == len(reqs)
+    assert m["prefill_tokens_saved"] > 0
+    for e in system.engines:
+        e.allocator.check_invariants()

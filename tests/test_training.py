@@ -1,7 +1,6 @@
 """Training substrate: loss decreases on the structured synthetic corpus;
 AdamW behaves; checkpoints roundtrip bit-exactly."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
