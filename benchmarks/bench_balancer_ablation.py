@@ -3,7 +3,6 @@ splits (25/50/75%) and the degenerate full-split (== disaggregated L-H).
 Shows the adaptive split is what buys Cronus its throughput."""
 from __future__ import annotations
 
-import copy
 import time
 
 from benchmarks.common import paper_trace
@@ -40,7 +39,7 @@ def run(n_requests: int = 500):
         sys_c = build_cronus(cfg, lo, hi,
                              executor_factory=lambda role: NullExecutor(),
                              balancer=bal)
-        m = sys_c.run([copy.deepcopy(r) for r in reqs])
+        m = sys_c.run(reqs.fresh())
         wall = (time.time() - t0) * 1e6 / n_requests
         print(f"balancer_ablation/{name},{wall:.1f},"
               f"tput={m['throughput']:.2f}req/s "

@@ -18,7 +18,6 @@ naive disaggregation, resurfacing at cluster scope).
 """
 from __future__ import annotations
 
-import copy
 import time
 
 from benchmarks.common import emit_csv_row
@@ -48,7 +47,7 @@ def run(n_requests: int = 300, arch: str = "llama3-8b",
             system = build_cluster(cfg, spec, router=router)
             assert len(system.engines) == n_engines
             t0 = time.time()
-            m = system.run([copy.deepcopy(r) for r in reqs])
+            m = system.run(reqs.fresh())
             wall = (time.time() - t0) * 1e6 / max(n_requests, 1)
             results[(label, router)] = m
             emit_csv_row(

@@ -14,7 +14,6 @@ FINDINGS (EXPERIMENTS.md §Perf-offload):
     memory- (not bandwidth-) limited. Feature ships default-off."""
 from __future__ import annotations
 
-import copy
 import time
 
 from repro.configs import get_config
@@ -40,7 +39,7 @@ def run(n_requests: int = 400):
         sys_c = build_cronus(cfg, lo, hi,
                              executor_factory=lambda role: NullExecutor(),
                              balancer=bal, decode_offload=offload)
-        m = sys_c.run([copy.deepcopy(r) for r in reqs])
+        m = sys_c.run(reqs.fresh())
         wall = (time.time() - t0) * 1e6 / n_requests
         n_ppi = len(sys_c.ppi.finished)
         print(f"offload/{name},{wall:.1f},tput={m['throughput']:.2f}req/s "

@@ -20,7 +20,6 @@ Run: ``PYTHONPATH=src python -m benchmarks.bench_prefix_cache
 from __future__ import annotations
 
 import argparse
-import copy
 import json
 from typing import Dict, List
 
@@ -121,19 +120,16 @@ def run(n_requests: int = 400, arch: str = "llama3-8b",
               f"reused={m['tokens_reused']} evict={m['evictions']}")
 
     for cache in (False, True):
-        reqs = [copy.deepcopy(r)
-                for r in _trace(max(n_requests // 4, 40), 0.8,
-                                n_prefixes=8)]
+        reqs = _trace(max(n_requests // 4, 40), 0.8, n_prefixes=8)
         emit("worker", "least_loaded", cache, _run_worker(cfg, cache, reqs))
     for router in ("least_loaded", "session", "prefix_affinity"):
         for cache in ((False, True) if router == "least_loaded"
                       else (True,)):
-            reqs = [copy.deepcopy(r) for r in _trace(n_requests, 0.2)]
+            reqs = _trace(n_requests, 0.2)
             emit("cluster", router, cache,
                  _run_cluster(cfg, router, cache, reqs))
     for cache in (False, True):
-        reqs = [copy.deepcopy(r)
-                for r in _trace(max(n_requests // 2, 40), 0.35)]
+        reqs = _trace(max(n_requests // 2, 40), 0.35)
         emit("cronus", "round_robin", cache, _run_cronus(cfg, cache, reqs))
 
     if out_path:

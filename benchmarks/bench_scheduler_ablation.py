@@ -18,7 +18,6 @@ Run: ``PYTHONPATH=src python -m benchmarks.bench_scheduler_ablation
 from __future__ import annotations
 
 import argparse
-import copy
 import json
 from typing import Dict, List
 
@@ -79,7 +78,7 @@ def run(n_requests: int = 300, arch: str = "llama3-8b",
     for trace_name, trace in _traces(n_requests).items():
         for rig, runner in (("worker", _run_worker), ("cronus", _run_cronus)):
             for policy in POLICIES:
-                reqs = [copy.deepcopy(r) for r in trace]
+                reqs = trace.fresh()
                 m = runner(cfg, policy, reqs)
                 row = {"rig": rig, "trace": trace_name, "policy": policy,
                        "ttft_slo": DEFAULT_TTFT_SLO,

@@ -1,54 +1,61 @@
-"""Quickstart: serve a reduced-config model through Cronus (real JAX
-execution) and print the generated tokens + QoE metrics.
+"""Quickstart on the online serving API: declare the deployment with a
+``ServeSpec``, submit requests to the built ``InferenceService``, stream
+one request's tokens as they are generated, and print QoE metrics.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py          # real JAX compute
+  PYTHONPATH=src python examples/quickstart.py --null   # simulated (CI)
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.balancer import Balancer
-from repro.core.cronus import build_cronus
-from repro.core.executor import RealExecutor
-from repro.core.predictor import profile_chunked, profile_prefill
 from repro.core.request import Request
-from repro.models import build_model
-from repro.serving.hardware import A10, A100, DeviceModel
+from repro.serving.api import ServeSpec
 
 
 def main():
-    # 1. a reduced llama3-8b-family model (full configs are dry-run only)
-    cfg = get_config("llama3-8b", smoke=True)
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--null", action="store_true",
+                    help="NullExecutor (no tensor compute; CI smoke)")
+    args = ap.parse_args()
+
+    # 1. the whole deployment as one declarative spec: a reduced
+    #    llama3-8b-family model on an A100 (CPI) + A10 (PPI) Cronus pair,
+    #    real JAX execution unless --null
+    spec = ServeSpec(arch="llama3-8b", smoke=True,
+                     approach="cronus", hi="A100", lo="A10",
+                     executor="null" if args.null else "real",
+                     max_slots=4, block_size=8, max_batched_tokens=32,
+                     s_kv=256, chunk_pad=32)
+    cfg = get_config(spec.arch, smoke=spec.smoke)
     print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f} M params)")
 
-    # 2. the heterogeneous pair: A100 (CPI) + A10 (PPI), roofline-timed
-    hi, lo = DeviceModel(A100, cfg), DeviceModel(A10, cfg)
+    # 2. build it: balancer, engines, executors and router are assembled
+    #    from the spec (no kwarg threading through the core builders)
+    service = spec.build()
 
-    # 3. Balancer = Algorithm 1 over profiled linear predictors (Eq. 2-3)
-    balancer = Balancer(profile_prefill(lo), profile_chunked(hi))
-
-    # 4. the Cronus system: PPI + KV buffer + CPI with chunked prefill
-    system = build_cronus(
-        cfg, lo, hi,
-        executor_factory=lambda role: RealExecutor(
-            model, params, max_slots=4, s_kv=256, chunk_pad=32),
-        balancer=balancer, max_batched_tokens=32, max_slots=4, block_size=8)
-
-    # 5. a few requests
+    # 3. submit a few requests — each returns a live handle
     rng = np.random.default_rng(0)
-    reqs = [Request(req_id=f"req{i}",
-                    prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
-                    output_len=8)
-            for i, n in enumerate((24, 57, 91))]
-    metrics = system.run(reqs)
+    handles = [service.submit(
+        Request(req_id=f"req{i}",
+                prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                output_len=8))
+        for i, n in enumerate((24, 57, 91))]
 
-    for r in sorted(system.cpi.finished, key=lambda r: r.req_id):
+    # 4. stream the last request's tokens as they arrive (this advances
+    #    the whole cluster's simulated time; the other requests progress
+    #    concurrently)
+    for tok, t in handles[-1].tokens():
+        print(f"  {handles[-1].req_id} @ t={t:7.4f}s -> token {tok}")
+
+    # 5. drain the rest and report
+    metrics = service.drain()
+    for h in sorted(handles, key=lambda h: h.req_id):
+        r = h.request
         print(f"{r.req_id}: L_in={r.input_len} partial_len={r.partial_len} "
               f"(PPI did {100*r.partial_len/r.input_len:.0f}%) "
               f"tokens={r.generated}")

@@ -1,23 +1,29 @@
-"""End-to-end driver: replay an Azure-style trace against all five serving
-approaches on a simulated A100+A10 cluster (paper §5 conditions: 1000
-conversation requests, mean in 1014 / out 247) and print the Table-2/Fig-4
-style comparison — then scale out to a multi-pair cluster and compare the
-three request routers.
+"""End-to-end driver on the online serving API: replay an Azure-style
+trace against all five serving approaches on a simulated A100+A10 pair
+(paper §5 conditions) and print the Table-2/Fig-4 style comparison — then
+scale out to a multi-pair cluster and compare the request routers. Every
+system is declared as a ``ServeSpec`` and driven through its
+``InferenceService``; the trace is re-used safely via ``Trace.fresh()``.
 
   PYTHONPATH=src python examples/serve_cluster_comparison.py [--n 1000]
 """
 import argparse
-import copy
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.cluster import build_cluster
 from repro.cluster.router import ROUTERS
-from repro.configs import get_config
-from repro.serving.hardware import A10, A100
-from repro.serving.simulator import APPROACHES, compare_all
+from repro.serving.api import ServeSpec
+from repro.serving.simulator import APPROACHES
 from repro.serving.trace import make_trace
+
+
+def compare(arch, reqs, approaches=APPROACHES):
+    out = {}
+    for a in approaches:
+        service = ServeSpec(arch=arch, approach=a).build()
+        out[a] = service.run(reqs.fresh())
+    return out
 
 
 def main():
@@ -26,11 +32,10 @@ def main():
     ap.add_argument("--arch", default="llama3-8b")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
     print(f"== max throughput ({args.n} requests, all at t=0), "
           f"{args.arch} on A100+A10 ==")
     reqs = make_trace(args.n, seed=0, interval=0.0)
-    res = compare_all(cfg, A100, A10, reqs)
+    res = compare(args.arch, reqs)
     print(f"{'approach':12s} {'tput(req/s)':>12s} {'ttft_p99(s)':>12s} "
           f"{'tbt_p99(ms)':>12s}")
     for a in APPROACHES:
@@ -38,20 +43,23 @@ def main():
         print(f"{a:12s} {m['throughput']:12.2f} {m['ttft_p99']:12.2f} "
               f"{m['tbt_p99']*1e3:12.1f}")
 
-    print(f"\n== latency at 6 req/s fixed interval ==")
+    print("\n== latency at 6 req/s fixed interval ==")
     reqs = make_trace(min(args.n, 400), seed=1, interval=1 / 6.0)
-    res = compare_all(cfg, A100, A10, reqs)
+    res = compare(args.arch, reqs)
     for a in APPROACHES:
         m = res[a]
         print(f"{a:12s} ttft_p99={m['ttft_p99']:8.3f}s "
               f"tbt_p99={m['tbt_p99']*1e3:7.1f}ms")
 
-    spec = "2xcronus:A100+A10,2xworker:A10"
-    print(f"\n== cluster scale-out: {spec} (6 engines), router comparison ==")
-    reqs = make_trace(min(args.n, 600), seed=2, interval=1 / 12.0, sessions=48)
+    cluster = "2xcronus:A100+A10,2xworker:A10"
+    print(f"\n== cluster scale-out: {cluster} (6 engines), "
+          f"router comparison ==")
+    reqs = make_trace(min(args.n, 600), seed=2, interval=1 / 12.0,
+                      sessions=48)
     for router in sorted(ROUTERS):
-        system = build_cluster(cfg, spec, router=router)
-        m = system.run([copy.deepcopy(r) for r in reqs])
+        service = ServeSpec(arch=args.arch, cluster=cluster,
+                            router=router).build()
+        m = service.run(reqs.fresh())
         print(f"{router:12s} tput={m['throughput']:6.2f}req/s "
               f"ttft_p99={m['ttft_p99']:8.3f}s "
               f"tbt_p99={m['tbt_p99']*1e3:7.1f}ms")

@@ -106,7 +106,9 @@ class CronusPairEndpoint(Endpoint):
         the receiving engine when it ingests the payload (steps 6-7)."""
         while self.ppi.completed_prefills:
             t_done, view = self.ppi.completed_prefills.pop(0)
-            orig = self._in_ppi.pop(view.req_id)
+            orig = self._in_ppi.pop(view.req_id, None)
+            if orig is None:
+                continue                     # cancelled while in the PPI
             orig.partial_len = view.context_len
             orig.context_len = view.context_len
             orig.kv_payload = view.kv_payload
@@ -118,10 +120,42 @@ class CronusPairEndpoint(Endpoint):
             else:
                 target = self.cpi
             if runtime is not None:
-                runtime.post(t_done,
-                             lambda r=orig, e=target: e.add_request(r))
+                # delivery closure re-checks the terminal state: a cancel
+                # landing between post and drain must not resurrect the
+                # request in the receiving queue
+                runtime.post(
+                    t_done,
+                    lambda r=orig, e=target:
+                        None if r.state is ReqState.CANCELLED
+                        else e.add_request(r))
             else:
                 target.add_request(orig)
+
+    def cancel(self, req: Request) -> bool:
+        """Mid-flight cancel across the pair: the request may live as a
+        PPI prefill view (queued, resident, or completed-but-unpumped),
+        as a delivered handoff on the CPI, or as an offloaded decoder
+        back on the PPI."""
+        rid = req.req_id
+        orig = self._in_ppi.pop(rid, None)
+        if orig is not None:
+            self._offloaded.discard(rid)
+            if self.ppi.cancel(rid) is None:
+                # the view already finished its partial prefill and sits
+                # in completed_prefills waiting for pump: drop it there
+                # (its PPI blocks were freed at completion)
+                self.ppi.completed_prefills = [
+                    (t, v) for t, v in self.ppi.completed_prefills
+                    if v.req_id != rid]
+                orig.metrics.cancelled = True
+                orig.metrics.cancel_time = self.ppi.clock
+            orig.state = ReqState.CANCELLED
+            orig.kv_payload = None
+            return True
+        for eng in (self.cpi, self.ppi):
+            if eng.cancel(rid) is not None:
+                return True
+        return False
 
     def finished(self) -> List[Request]:
         return list(self.cpi.finished) + list(self.ppi.finished)

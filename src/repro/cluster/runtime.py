@@ -34,7 +34,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.engine import Engine
 from repro.core.metrics import aggregate
-from repro.core.request import Request
+from repro.core.request import ReqState, Request
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +66,14 @@ class Endpoint(abc.ABC):
 
     def pump(self, runtime: Optional["ClusterRuntime"] = None):
         """Move internal handoffs (e.g. PPI->CPI KV transfers). Default: none."""
+
+    def cancel(self, req: Request) -> bool:
+        """Abort a routed request mid-flight: free its slot/KV blocks and
+        record the cancelled terminal state. True if an engine held it."""
+        for e in self.engines:
+            if e.cancel(req.req_id) is not None:
+                return True
+        return False
 
     @abc.abstractmethod
     def finished(self) -> List[Request]:
@@ -203,41 +211,78 @@ class ClusterRuntime:
             del pending[placed_at]
             ep.submit(req, self)
 
+    def tick(self, pending: deque) -> bool:
+        """One round of the event loop: dispatch pending arrivals, move
+        internal handoffs, then advance the globally-lagging runnable
+        engine (or, if the whole cluster is idle, jump every clock to the
+        next event time). Returns False only when no progress is possible
+        at all — the online facade (``repro.serving.api``) drives this
+        incrementally; ``run`` below is the batch replay over it."""
+        self._dispatch(pending)
+
+        # ---- internal handoffs; fire what they posted --------------
+        for ep in self.endpoints:
+            ep.pump(self)
+        self._drain_events()
+
+        # ---- advance the globally-lagging runnable engine ----------
+        for eng in sorted(self.engines, key=lambda e: e.clock):
+            if eng.runnable():
+                eng.step()
+                return True
+        # cluster idle: jump every clock to the next event time
+        # (pump deliveries drained above, so only engine ready
+        # times and undispatched arrivals remain)
+        nexts = [t for e in self.engines
+                 if (t := e.next_ready_time()) is not None]
+        if pending:
+            nexts.append(pending[0].arrival)
+        if not nexts:
+            return False   # deadlock guard (shouldn't happen)
+        t = min(nexts)
+        for e in self.engines:
+            e.clock = max(e.clock, t)
+        return True
+
+    def next_time(self, pending: Optional[deque] = None) -> Optional[float]:
+        """Earliest simulated time at which the cluster can make progress
+        (runnable engine clock, queued ready time, posted event, or the
+        head pending arrival). None when fully idle."""
+        cands = [e.clock for e in self.engines if e.runnable()]
+        cands += [t for e in self.engines
+                  if (t := e.next_ready_time()) is not None]
+        if self._events:
+            cands.append(self._events[0].time)
+        if pending:
+            cands.append(pending[0].arrival)
+        return min(cands) if cands else None
+
     def run(self, requests: List[Request], max_steps: int = 10_000_000):
         """Replay a trace over the cluster; returns aggregate metrics."""
+        check_requests_fresh(requests)
         pending = deque(sorted(requests, key=lambda r: r.arrival))
         total = len(requests)
         steps = 0
-
         while self.n_finished() < total and steps < max_steps:
             steps += 1
-            self._dispatch(pending)
-
-            # ---- internal handoffs; fire what they posted --------------
-            for ep in self.endpoints:
-                ep.pump(self)
-            self._drain_events()
-
-            # ---- advance the globally-lagging runnable engine ----------
-            progressed = False
-            for eng in sorted(self.engines, key=lambda e: e.clock):
-                if eng.runnable():
-                    eng.step()
-                    progressed = True
-                    break
-            if not progressed:
-                # cluster idle: jump every clock to the next event time
-                # (pump deliveries drained above, so only engine ready
-                # times and undispatched arrivals remain)
-                nexts = [t for e in self.engines
-                         if (t := e.next_ready_time()) is not None]
-                if pending:
-                    nexts.append(pending[0].arrival)
-                if not nexts:
-                    break   # deadlock guard (shouldn't happen)
-                t = min(nexts)
-                for e in self.engines:
-                    e.clock = max(e.clock, t)
-
+            if not self.tick(pending):
+                break
         return aggregate([r.metrics for ep in self.endpoints
                           for r in ep.finished()])
+
+
+def check_requests_fresh(requests: Sequence[Request]) -> None:
+    """Engines mutate requests in place (state, generated tokens, metrics),
+    so replaying the same ``Request`` objects twice silently corrupts the
+    second run. Refuse loudly instead — callers re-using a trace should
+    pass fresh copies (``Trace.fresh()`` / ``copy.deepcopy``)."""
+    for r in requests:
+        if (r.state is not ReqState.WAITING or r.generated
+                or r.slot is not None or r.context_len != 0
+                or r.metrics.first_token_time is not None
+                or r.metrics.finish_time is not None
+                or r.metrics.cancelled):
+            raise ValueError(
+                f"request {r.req_id!r} was already replayed through a "
+                "system (engines mutate requests in place); pass fresh "
+                "copies — Trace.fresh() or copy.deepcopy the trace")

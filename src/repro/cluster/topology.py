@@ -140,6 +140,13 @@ class ClusterSystem:
         return ClusterRuntime(self.endpoints, self.router).run(
             requests, max_steps)
 
+    def service(self):
+        """This cluster as an online :class:`repro.serving.api.
+        InferenceService` (submit/stream/cancel). Lazy import: the api
+        module sits above the cluster layer."""
+        from repro.serving.api import InferenceService
+        return InferenceService(self.endpoints, self.router, system=self)
+
 
 def _null_factory(role: str):
     from repro.core.executor import NullExecutor

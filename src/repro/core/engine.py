@@ -65,6 +65,14 @@ class Engine:
         self.finished: List[Request] = []
         self.completed_prefills: List = []   # (time, req) from prefill-only role
         self.n_preemptions = 0               # recompute preemptions served
+        # per-token emission hook for streaming consumers (InferenceService):
+        # called as on_token(request, token_id, clock) at the moment each
+        # output token's timestamp is recorded. None = no overhead.
+        self.on_token = None
+
+    def _emit(self, req: Request, token: int):
+        if self.on_token is not None:
+            self.on_token(req, token, self.clock)
 
     # ------------------------------------------------------------------
     # admission
@@ -272,6 +280,7 @@ class Engine:
                 self.clock += transfer_time
                 for r in ttft_at_ingest:
                     r.metrics.first_token_time = self.clock
+                    self._emit(r, r.generated[-1])
                     r.metrics.finish_time = self.clock
                     self._finish(r)
             return transfer_time
@@ -314,6 +323,7 @@ class Engine:
         self.clock += duration
         for r in ttft_at_ingest:
             r.metrics.first_token_time = self.clock
+            self._emit(r, r.generated[-1])
             if r.done:
                 r.metrics.finish_time = self.clock
                 self._finish(r)
@@ -334,6 +344,7 @@ class Engine:
             else:
                 r.first_token = first
                 r.generated.append(first)   # first output token
+                self._emit(r, first)
                 if r.preempted and r.input_len > r.metrics.input_len:
                     # recompute after a preemption that folded delivered
                     # tokens into the prompt (input_len grew past the
@@ -358,6 +369,7 @@ class Engine:
             for r in decode_reqs:
                 tok = new_tokens[r.slot]
                 r.generated.append(tok)
+                self._emit(r, tok)
                 if r.done:
                     r.metrics.token_times.append(self.clock)
                     r.metrics.finish_time = self.clock
@@ -382,6 +394,33 @@ class Engine:
         self.slots[req.slot] = None
         req.slot = None
         self.finished.append(req)
+
+    def cancel(self, req_id: str) -> Optional[Request]:
+        """Abort a queued or resident request mid-flight: release its slot
+        and KV blocks (nothing is registered in the prefix cache — the
+        sequence never completed) and record the ``cancelled`` terminal
+        state in its metrics. Returns the request, or None if this engine
+        does not hold it. Call between iterations only (plans hold no
+        state across ``step()`` calls)."""
+        for i, r in enumerate(self.queue):
+            if r.req_id == req_id:
+                del self.queue[i]
+                return self._cancel(r)
+        for r in self.slots:
+            if r is not None and r.req_id == req_id:
+                self.executor.reset_slot(r.slot)
+                self.slots[r.slot] = None
+                r.slot = None
+                return self._cancel(r)
+        return None
+
+    def _cancel(self, req: Request) -> Request:
+        self.allocator.free(req.req_id)    # no-op when nothing is owned
+        req.kv_payload = None
+        req.state = ReqState.CANCELLED
+        req.metrics.cancelled = True
+        req.metrics.cancel_time = self.clock
+        return req
 
     def _complete_prefill_instance(self, req: Request):
         """Prefill-only instance: extract KV and release the slot; the

@@ -18,6 +18,11 @@ class RequestMetrics:
     token_times: List[float] = dataclasses.field(default_factory=list)
     finish_time: Optional[float] = None
     cached_prefix_tokens: int = 0     # prompt tokens served from prefix cache
+    # terminal state: a request either finishes (finish_time set) or is
+    # cancelled mid-flight (cancelled set, finish_time stays None) —
+    # cancelled requests never enter throughput/latency aggregates
+    cancelled: bool = False
+    cancel_time: Optional[float] = None
 
     @property
     def ttft(self) -> float:
@@ -65,10 +70,13 @@ def aggregate(reqs: List[RequestMetrics],
     """Fleet QoE summary. Passing both SLOs adds a ``goodput`` key (the
     default call returns exactly the seed's dict, so existing run metrics
     stay bit-identical)."""
-    done = [r for r in reqs if r.finish_time is not None]
+    done = [r for r in reqs if r.finish_time is not None and not r.cancelled]
+    n_cancelled = sum(1 for r in reqs if r.cancelled)
     if not done:
         out = {"throughput": 0.0, "ttft_p99": float("nan"),
                "tbt_p99": float("nan"), "completed": 0}
+        if n_cancelled:
+            out["cancelled"] = n_cancelled
         if ttft_slo is not None and tbt_slo is not None:
             out["goodput"] = 0.0 if reqs else float("nan")
         return out
@@ -85,6 +93,10 @@ def aggregate(reqs: List[RequestMetrics],
         "completed": len(done),
         "makespan": t1 - t0,
     }
+    if n_cancelled:
+        # cancellation key appears only when cancels happened, so a
+        # cancel-free run's dict stays byte-identical to the seed's
+        out["cancelled"] = n_cancelled
     saved = sum(r.cached_prefix_tokens for r in done)
     if saved:
         # Prefix-cache keys appear only when the cache actually hit, so a

@@ -16,6 +16,7 @@ class ReqState(enum.Enum):
     PREFILL = "prefill"        # chunked prefill in progress
     RUNNING = "running"        # decoding
     FINISHED = "finished"
+    CANCELLED = "cancelled"    # aborted mid-flight (slots/KV blocks freed)
 
 
 @dataclasses.dataclass

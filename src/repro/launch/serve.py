@@ -1,29 +1,38 @@
-"""Serving launcher: run Cronus (or a baseline) on a trace — on a single
-high/low pair (``--approach``) or on a whole heterogeneous cluster
-(``--cluster``).
+"""Serving launcher over the online API: a :class:`~repro.serving.api.
+ServeSpec` describes the system (pair or cluster, router, scheduler,
+executor), a trace describes the workload, and the built
+:class:`~repro.serving.api.InferenceService` replays it — batch
+(``run``-equivalent submit-all + drain), streaming (``--stream``), or
+with a mid-flight cancellation (``--cancel-after``).
 
 Examples:
   # paper-scale scheduling/timing run (null executor, simulated clocks):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --approach cronus --hi A100 --lo A10 --n-requests 1000
 
-  # same pair under the sarathi multi-sequence chunk-packing scheduler
-  # (lazy paged-KV growth + preemption-by-recompute on OOM):
+  # same pair under the sarathi multi-sequence chunk-packing scheduler:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --approach cronus --sched-policy sarathi --n-requests 1000
 
-  # multi-instance cluster: two Cronus pairs + four A10 workers behind a
-  # least-loaded router; per-endpoint policies via the @policy suffix
-  # (workers run SJF, pairs keep the --sched-policy default):
+  # multi-instance cluster behind a least-loaded router:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --cluster "2xcronus:A100+A10,4xworker:A10@sjf" \
       --router least_loaded --n-requests 2000
 
-  # shared-prefix workload with block-level KV reuse and prefix-affinity
-  # routing (requests chase the endpoint already holding their prefix):
+  # shared-prefix workload with KV reuse + prefix-affinity routing:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --cluster "4xworker:A10" --prefix-cache --router prefix_affinity \
       --trace shared_prefix --n-requests 1000
+
+  # stream the first request's tokens, cancel it after 32:
+  PYTHONPATH=src python -m repro.launch.serve --approach cronus \
+      --n-requests 50 --stream --cancel-after 32
+
+  # persist / reuse a deployment description:
+  PYTHONPATH=src python -m repro.launch.serve --sched-policy sarathi \
+      --dump-spec sarathi.json
+  PYTHONPATH=src python -m repro.launch.serve --spec sarathi.json \
+      --n-requests 500
 
   # functional run with real JAX execution on reduced config:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
@@ -34,105 +43,106 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
-
-from repro.cluster import build_cluster
-from repro.cluster.router import ROUTERS
 from repro.configs import get_config
-from repro.core.executor import NullExecutor, RealExecutor
-from repro.models import build_model
-from repro.scheduling import SCHEDULERS
-from repro.serving.hardware import DEVICES
-from repro.serving.simulator import APPROACHES, build_system
+from repro.serving.api import ServeSpec
 from repro.serving.trace import make_shared_prefix_trace, make_trace
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--approach", default="cronus", choices=APPROACHES)
-    ap.add_argument("--hi", default="A100", choices=sorted(DEVICES))
-    ap.add_argument("--lo", default="A10", choices=sorted(DEVICES))
-    ap.add_argument("--cluster", default=None,
-                    help="cluster spec, e.g. '2xcronus:A100+A10,4xworker:A10'"
-                         " (overrides --approach/--hi/--lo)")
-    ap.add_argument("--router", default="least_loaded",
-                    choices=sorted(ROUTERS), help="cluster request router")
-    ap.add_argument("--sched-policy", default="fcfs",
-                    choices=sorted(SCHEDULERS),
-                    help="iteration-level batch-composition policy "
-                         "(fcfs = seed-identical; sarathi/sjf pack multiple "
-                         "prefills, grow KV lazily and preempt on OOM); "
-                         "per-endpoint override via '@policy' in --cluster")
-    ap.add_argument("--sessions", type=int, default=0,
-                    help="tag requests with this many conversation ids "
-                         "(session-affinity routing)")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="shared-prefix KV reuse (refcounted copy-on-write "
-                         "block cache); per-endpoint override via '@cache' "
-                         "in --cluster. Simulation-only: not valid with "
-                         "--real, whose slot cache holds no cached prefix")
-    ap.add_argument("--trace", default="azure",
-                    choices=("azure", "shared_prefix"),
-                    help="workload shape: the Azure-conversation trace, or "
-                         "the multi-tenant shared-prefix trace where "
-                         "--prefix-cache pays off")
-    ap.add_argument("--prefix-groups", type=int, default=8,
-                    help="shared_prefix trace: number of distinct prefixes")
-    ap.add_argument("--prefix-len", type=int, default=512,
-                    help="shared_prefix trace: tokens per shared prefix")
-    ap.add_argument("--n-requests", type=int, default=1000)
-    ap.add_argument("--interval", type=float, default=0.0,
-                    help="arrival interval (s); 0 = all at t0 (max tput)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--smoke", action="store_true",
-                    help="use the reduced config")
-    ap.add_argument("--real", action="store_true",
-                    help="real JAX execution (requires --smoke scale)")
-    ap.add_argument("--scale", type=float, default=1.0,
-                    help="trace length scale (use ~0.02 with --real)")
-    ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+def build_arg_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    # ---- system description: every flag here mirrors a ServeSpec field
+    ServeSpec.add_cli_args(ap)
+    # ---- workload (the trace is not part of the deployment spec)
+    w = ap.add_argument_group("workload")
+    w.add_argument("--trace", default="azure",
+                   choices=("azure", "shared_prefix"),
+                   help="workload shape: the Azure-conversation trace, or "
+                        "the multi-tenant shared-prefix trace where "
+                        "--prefix-cache pays off")
+    w.add_argument("--n-requests", type=int, default=1000)
+    w.add_argument("--interval", type=float, default=0.0,
+                   help="arrival interval (s); 0 = all at t0 (max tput)")
+    w.add_argument("--seed", type=int, default=0)
+    w.add_argument("--scale", type=float, default=1.0,
+                   help="trace length scale (use ~0.02 with --real)")
+    w.add_argument("--sessions", type=int, default=0,
+                   help="tag requests with this many conversation ids "
+                        "(session-affinity routing)")
+    w.add_argument("--prefix-groups", type=int, default=8,
+                   help="shared_prefix trace: number of distinct prefixes")
+    w.add_argument("--prefix-len", type=int, default=512,
+                   help="shared_prefix trace: tokens per shared prefix")
+    # ---- demo / IO
+    d = ap.add_argument_group("online demo / output")
+    d.add_argument("--stream", action="store_true",
+                   help="print the first request's tokens as they arrive "
+                        "(token id + simulated timestamp)")
+    d.add_argument("--cancel-after", type=int, default=None, metavar="K",
+                   help="cancel the first request mid-flight after K of "
+                        "its tokens (its slot/KV blocks are freed; it is "
+                        "reported under the 'cancelled' metric)")
+    d.add_argument("--spec", default=None, metavar="FILE",
+                   help="load the ServeSpec from a JSON file "
+                        "(system flags on the command line are ignored)")
+    d.add_argument("--dump-spec", default=None, metavar="FILE",
+                   help="write the resolved ServeSpec as JSON and exit "
+                        "('-' for stdout)")
+    d.add_argument("--out", default=None)
+    return ap
 
-    cfg = get_config(args.arch, smoke=args.smoke)
+
+def _make_trace(args, vocab_size: int):
     if args.trace == "shared_prefix":
-        reqs = make_shared_prefix_trace(
+        return make_shared_prefix_trace(
             args.n_requests, seed=args.seed, interval=args.interval,
             n_prefixes=args.prefix_groups, prefix_len=args.prefix_len,
-            vocab_size=cfg.vocab_size, scale=args.scale)
-    else:
-        reqs = make_trace(args.n_requests, seed=args.seed,
-                          interval=args.interval, vocab_size=cfg.vocab_size,
-                          scale=args.scale, sessions=args.sessions or None)
-    if args.real and (args.prefix_cache or "@cache" in (args.cluster or "")):
-        raise SystemExit("prefix caching (--prefix-cache / '@cache' node "
-                         "suffix) models KV reuse at the block-table level; "
-                         "the RealExecutor's slot cache cannot serve cached "
-                         "prefixes, so it is simulation-only")
+            vocab_size=vocab_size, scale=args.scale)
+    return make_trace(args.n_requests, seed=args.seed,
+                      interval=args.interval, vocab_size=vocab_size,
+                      scale=args.scale, sessions=args.sessions or None)
 
-    if args.real:
-        model = build_model(cfg, exact_moe=True)
-        params = model.init_params(jax.random.PRNGKey(0))
-        s_kv = int(max(r.input_len + r.output_len for r in reqs) + 8)
 
-        def factory(role):
-            return RealExecutor(model, params,
-                                max_slots=2 if role == "ppi" else 16,
-                                s_kv=s_kv)
-        ex_kw = dict(executor_factory=factory, max_slots=16, block_size=4)
-    else:
-        ex_kw = dict(executor_factory=lambda role: NullExecutor())
+def main():
+    args = build_arg_parser().parse_args()
+    try:
+        spec = (ServeSpec.from_json_file(args.spec) if args.spec
+                else ServeSpec.from_cli(args))
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        raise SystemExit(f"bad serving spec: {e}")
 
-    if args.cluster:
-        system = build_cluster(cfg, args.cluster, router=args.router,
-                               sched_policy=args.sched_policy,
-                               prefix_cache=args.prefix_cache, **ex_kw)
-    else:
-        system = build_system(args.approach, cfg, DEVICES[args.hi],
-                              DEVICES[args.lo],
-                              sched_policy=args.sched_policy,
-                              prefix_cache=args.prefix_cache, **ex_kw)
-    metrics = system.run(reqs)
+    if args.dump_spec:
+        text = json.dumps(spec.to_dict(), indent=2)
+        if args.dump_spec == "-":
+            print(text)
+        else:
+            with open(args.dump_spec, "w") as f:
+                f.write(text + "\n")
+        return
+
+    cfg = get_config(spec.arch, smoke=spec.smoke)
+    reqs = _make_trace(args, cfg.vocab_size)
+    if spec.executor == "real" and spec.s_kv is None:
+        spec = spec.replace(s_kv=int(
+            max(r.input_len + r.output_len for r in reqs) + 8))
+
+    service = spec.build()
+    handles = [service.submit(r) for r in reqs]
+
+    if args.stream or args.cancel_after is not None:
+        # online demo: follow the first request's token stream (this
+        # advances the whole cluster), optionally cancelling mid-flight
+        head = handles[0]
+        for n, (tok, t) in enumerate(head.tokens(), start=1):
+            if args.stream:
+                print(f"[{head.req_id} t={t:9.4f}s] token {n}/"
+                      f"{head.request.output_len}: {tok}")
+            if args.cancel_after is not None and n >= args.cancel_after:
+                head.cancel()
+                print(f"[{head.req_id}] cancelled after {n} tokens "
+                      f"(status={head.status})")
+                break
+
+    metrics = service.drain()
     print(json.dumps(metrics, indent=2))
     if args.out:
         with open(args.out, "w") as f:

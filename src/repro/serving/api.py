@@ -1,0 +1,564 @@
+"""Online serving API: declarative :class:`ServeSpec` + request-level
+:class:`InferenceService`.
+
+Cronus is an *online* system — requests arrive continuously and TTFT/TBT
+tail latency is the product — but until this module the only public
+surface was offline: thread kwargs through five builders
+(``build_cronus`` / ``build_dp`` / ``build_pp`` / ``build_cluster`` /
+``build_system``) and call ``run(full_trace)``. This module replaces that
+with the two layers production stacks expose:
+
+``ServeSpec``
+    One frozen dataclass describing the whole deployment — model arch,
+    pair vs cluster topology, router, scheduling policy, prefix caching,
+    executor, KV sizing. JSON round-trippable (``to_dict``/``from_dict``),
+    argparse round-trippable (``add_cli_args``/``from_cli``), validated at
+    construction, and ``build()`` materialises it into a running service,
+    subsuming the kwarg plumbing of the five builders.
+
+``InferenceService``
+    The online facade over :class:`~repro.cluster.runtime.ClusterRuntime`:
+    ``submit(req) -> RequestHandle`` (streaming via ``handle.tokens()``,
+    driven by the per-token emission hook in ``Engine.step``),
+    ``handle.cancel()`` (frees slots/KV blocks mid-flight, records the
+    ``cancelled`` terminal metric), ``step_until(t)`` incremental
+    simulation, and ``drain()``. The legacy batch surface survives as the
+    thin wrapper ``run(requests)`` = submit-all + drain, bit-identical on
+    metrics to the builders' ``system.run(trace)``.
+
+Example::
+
+    spec = ServeSpec(cluster="2xcronus:A100+A10,4xworker:A10",
+                     router="least_loaded", sched_policy="sarathi")
+    service = spec.build()
+    handle = service.submit(Request("r0", prompt, output_len=64))
+    for token, t in handle.tokens():      # advances simulated time
+        ...
+    metrics = service.drain()
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import deque
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Tuple
+
+from repro.cluster.router import ROUTERS, Router, RoundRobinRouter, make_router
+from repro.cluster.runtime import (ClusterRuntime, Endpoint, WorkerEndpoint,
+                                   check_requests_fresh)
+from repro.cluster.topology import build_cluster, parse_cluster_spec
+from repro.configs import ARCH_IDS, get_config
+from repro.core.metrics import RequestMetrics, aggregate
+from repro.core.request import ReqState, Request
+from repro.scheduling import SCHEDULERS
+from repro.serving.hardware import DEVICES
+from repro.serving.simulator import APPROACHES, build_system
+
+EXECUTORS = ("null", "real")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Declarative description of one serving deployment — the single
+    source of truth ``launch/serve.py`` and the examples build from.
+
+    Topology is either a single heterogeneous pair (``approach`` over the
+    ``hi``/``lo`` devices — one of ``cronus | dp | pp | disagg_hl |
+    disagg_lh``) or a whole cluster (``cluster`` DSL string such as
+    ``"2xcronus:A100+A10,4xworker:A10@sjf"``, which overrides
+    ``approach``/``hi``/``lo``).
+
+    ``router=None`` picks the approach-appropriate default: the weighted
+    round-robin of the paper's DP baseline, plain round-robin for
+    single-endpoint topologies, least-loaded for clusters — exactly what
+    the legacy ``system.run`` paths used, so a default spec reproduces
+    their metrics bit-for-bit.
+
+    ``executor="real"`` runs real JAX compute (reduced configs only) and
+    needs ``s_kv`` — the per-slot KV capacity in tokens, normally the max
+    ``input_len + output_len`` of the workload plus headroom.
+    """
+
+    arch: str = "llama3-8b"
+    smoke: bool = False                   # reduced model config
+    approach: str = "cronus"              # one of APPROACHES (pair mode)
+    hi: str = "A100"                      # high-end device (pair mode)
+    lo: str = "A10"                       # low-end device (pair mode)
+    cluster: Optional[str] = None         # topology DSL; overrides approach
+    router: Optional[str] = None          # None = approach-appropriate
+    sched_policy: str = "fcfs"            # iteration-level batch policy
+    prefix_cache: bool = False            # shared-prefix KV reuse (sim only)
+    executor: str = "null"                # "null" (simulated) | "real" (JAX)
+    max_slots: int = 256                  # resident-request limit per engine
+    block_size: int = 16                  # KV block granularity
+    max_batched_tokens: int = 512         # chunked-prefill token budget
+    s_kv: Optional[int] = None            # real executor: KV tokens per slot
+    chunk_pad: Optional[int] = None       # real executor: pad chunks (jit)
+
+    def __post_init__(self):
+        self.validate()
+
+    # ------------------------------------------------------------------
+    # validation
+    # ------------------------------------------------------------------
+    def validate(self) -> None:
+        if self.arch not in ARCH_IDS:
+            raise ValueError(f"unknown arch {self.arch!r}; "
+                             f"choose from {ARCH_IDS}")
+        if self.cluster is not None:
+            parse_cluster_spec(self.cluster)     # raises ValueError on DSL errors
+        else:
+            if self.approach not in APPROACHES:
+                raise ValueError(f"unknown approach {self.approach!r}; "
+                                 f"choose from {APPROACHES}")
+            for dev in (self.hi, self.lo):
+                if dev not in DEVICES:
+                    raise ValueError(f"unknown device {dev!r}; "
+                                     f"choose from {sorted(DEVICES)}")
+        if self.router is not None and self.router not in ROUTERS:
+            raise ValueError(f"unknown router {self.router!r}; "
+                             f"choose from {sorted(ROUTERS)}")
+        if self.sched_policy not in SCHEDULERS:
+            raise ValueError(f"unknown sched policy {self.sched_policy!r}; "
+                             f"choose from {sorted(SCHEDULERS)}")
+        if self.executor not in EXECUTORS:
+            raise ValueError(f"unknown executor {self.executor!r}; "
+                             f"choose from {EXECUTORS}")
+        if self.executor == "real" and (
+                self.prefix_cache or "@cache" in (self.cluster or "")):
+            raise ValueError(
+                "prefix caching (prefix_cache / '@cache' node suffix) "
+                "models KV reuse at the block-table level; the "
+                "RealExecutor's slot cache cannot serve cached prefixes, "
+                "so it is simulation-only")
+        for name in ("max_slots", "block_size", "max_batched_tokens"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1")
+        if (self.cluster is None and self.approach in ("dp", "pp")
+                and self.max_batched_tokens
+                != self._default("max_batched_tokens")):
+            # refuse rather than silently ignore: these baselines pin the
+            # paper's §5.1 per-engine budgets (dp: 512 high / 256 low,
+            # pp: 512) inside build_dp/build_pp
+            raise ValueError(
+                f"approach {self.approach!r} uses the paper's fixed "
+                "per-engine token budgets (dp: 512/256, pp: 512); "
+                "max_batched_tokens applies to cronus/disagg pairs and "
+                "--cluster topologies")
+        if self.s_kv is not None and self.s_kv < 1:
+            raise ValueError("s_kv must be >= 1")
+
+    # ------------------------------------------------------------------
+    # serialization (JSON round-trip)
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ServeSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ServeSpec keys {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        return cls(**d)
+
+    @classmethod
+    def from_json_file(cls, path: str) -> "ServeSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def replace(self, **changes) -> "ServeSpec":
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------------
+    # argparse round-trip (serve.py's system flags live HERE so the CLI
+    # can never drift from the spec — see tests/test_api.py)
+    # ------------------------------------------------------------------
+    @classmethod
+    def add_cli_args(cls, ap) -> None:
+        g = ap.add_argument_group(
+            "serving spec", "system topology and policies (ServeSpec)")
+        g.add_argument("--arch", default=cls._default("arch"),
+                       choices=ARCH_IDS)
+        g.add_argument("--smoke", action="store_true",
+                       help="use the reduced model config")
+        g.add_argument("--approach", default=cls._default("approach"),
+                       choices=APPROACHES)
+        g.add_argument("--hi", default=cls._default("hi"),
+                       choices=sorted(DEVICES))
+        g.add_argument("--lo", default=cls._default("lo"),
+                       choices=sorted(DEVICES))
+        g.add_argument("--cluster", default=None,
+                       help="cluster spec, e.g. "
+                            "'2xcronus:A100+A10,4xworker:A10' "
+                            "(overrides --approach/--hi/--lo)")
+        g.add_argument("--router", default=None, choices=sorted(ROUTERS),
+                       help="cluster request router (default: approach-"
+                            "appropriate — weighted RR for dp, "
+                            "least-loaded for --cluster)")
+        g.add_argument("--sched-policy", default=cls._default("sched_policy"),
+                       choices=sorted(SCHEDULERS),
+                       help="iteration-level batch-composition policy "
+                            "(fcfs = seed-identical); per-endpoint "
+                            "override via '@policy' in --cluster")
+        g.add_argument("--prefix-cache", action="store_true",
+                       help="shared-prefix KV reuse (simulation-only; "
+                            "per-endpoint override via '@cache')")
+        g.add_argument("--real", action="store_true",
+                       help="real JAX execution (executor='real'; use "
+                            "with --smoke and a scaled trace)")
+        g.add_argument("--max-slots", type=int, default=None,
+                       help="resident-request limit per engine "
+                            "(default 256; 16 with --real)")
+        g.add_argument("--block-size", type=int, default=None,
+                       help="KV block granularity (default 16; 4 with "
+                            "--real)")
+        g.add_argument("--max-batched-tokens", type=int,
+                       default=cls._default("max_batched_tokens"),
+                       help="chunked-prefill token budget per iteration")
+        g.add_argument("--s-kv", type=int, default=None,
+                       help="real executor: KV capacity per slot in "
+                            "tokens (default: derived from the trace)")
+        g.add_argument("--chunk-pad", type=int, default=None,
+                       help="real executor: pad prefill chunks to this "
+                            "multiple (fewer jit recompiles)")
+
+    @classmethod
+    def from_cli(cls, args) -> "ServeSpec":
+        executor = "real" if getattr(args, "real", False) else "null"
+        # --real keeps the historical CPU-scale defaults unless overridden
+        max_slots = args.max_slots if args.max_slots is not None else (
+            16 if executor == "real" else cls._default("max_slots"))
+        block_size = args.block_size if args.block_size is not None else (
+            4 if executor == "real" else cls._default("block_size"))
+        return cls(arch=args.arch, smoke=args.smoke, approach=args.approach,
+                   hi=args.hi, lo=args.lo, cluster=args.cluster,
+                   router=args.router, sched_policy=args.sched_policy,
+                   prefix_cache=args.prefix_cache, executor=executor,
+                   max_slots=max_slots, block_size=block_size,
+                   max_batched_tokens=args.max_batched_tokens,
+                   s_kv=args.s_kv, chunk_pad=args.chunk_pad)
+
+    @classmethod
+    def _default(cls, field: str):
+        return cls.__dataclass_fields__[field].default
+
+    # ------------------------------------------------------------------
+    # materialisation
+    # ------------------------------------------------------------------
+    def build(self, model=None, params=None) -> "InferenceService":
+        """Build engines, endpoints and router per this spec and wrap
+        them in an online :class:`InferenceService`.
+
+        ``executor="real"`` accepts a pre-built ``model``/``params`` pair
+        (otherwise the model is built and initialised here) and requires
+        ``s_kv``.
+        """
+        cfg = get_config(self.arch, smoke=self.smoke)
+        factory = self._executor_factory(cfg, model, params)
+        if self.cluster is not None:
+            system = build_cluster(
+                cfg, self.cluster, router=self.router or "least_loaded",
+                executor_factory=factory, max_slots=self.max_slots,
+                block_size=self.block_size,
+                max_batched_tokens=self.max_batched_tokens,
+                sched_policy=self.sched_policy,
+                prefix_cache=self.prefix_cache)
+            return InferenceService(system.endpoints, system.router,
+                                    spec=self, cfg=cfg, system=system)
+        system = build_system(
+            self.approach, cfg, DEVICES[self.hi], DEVICES[self.lo],
+            executor_factory=factory, max_slots=self.max_slots,
+            block_size=self.block_size,
+            max_batched_tokens=self.max_batched_tokens,
+            sched_policy=self.sched_policy, prefix_cache=self.prefix_cache)
+        endpoints, router = self._pair_endpoints(system)
+        return InferenceService(endpoints, router, spec=self, cfg=cfg,
+                                system=system)
+
+    def _pair_endpoints(self, system) -> Tuple[List[Endpoint], Router]:
+        """Endpoint + router wiring for the five single-pair approaches —
+        identical to what each system's legacy ``run()`` assembles, so
+        default-spec services reproduce their metrics bit-for-bit."""
+        if self.approach == "dp":
+            endpoints: List[Endpoint] = system.endpoints()
+            default: Router = RoundRobinRouter(weights=system.weights)
+        elif self.approach == "pp":
+            endpoints = [WorkerEndpoint(system.engine.name, system.engine,
+                                        queue_cap=None)]
+            default = RoundRobinRouter()
+        else:                       # cronus / disagg_hl / disagg_lh
+            endpoints = [system.endpoint()]
+            default = RoundRobinRouter()
+        router = make_router(self.router) if self.router else default
+        return endpoints, router
+
+    def _executor_factory(self, cfg, model, params) -> Callable:
+        if self.executor == "null":
+            from repro.core.executor import NullExecutor
+            return lambda role: NullExecutor()
+        if self.s_kv is None:
+            raise ValueError(
+                "executor='real' needs s_kv (per-slot KV capacity in "
+                "tokens) — spec.replace(s_kv=max context + headroom)")
+        from repro.core.executor import RealExecutor
+        if model is None:
+            import jax
+            from repro.models import build_model
+            model = build_model(cfg, exact_moe=True)
+            params = model.init_params(jax.random.PRNGKey(0))
+        spec = self
+
+        def factory(role):
+            return RealExecutor(
+                model, params,
+                max_slots=2 if role == "ppi" else spec.max_slots,
+                s_kv=spec.s_kv, chunk_pad=spec.chunk_pad)
+        return factory
+
+
+# ---------------------------------------------------------------------------
+# the online facade
+# ---------------------------------------------------------------------------
+
+class RequestHandle:
+    """Live view of one submitted request: stream its tokens, wait for
+    its result, or cancel it mid-flight. Obtained from
+    :meth:`InferenceService.submit` — never constructed directly."""
+
+    def __init__(self, request: Request, service: "InferenceService"):
+        self.request = request
+        self._service = service
+        self._streaming = False        # buffer only once tokens() is asked
+        self._stream: Deque[Tuple[int, float]] = deque()
+
+    @property
+    def req_id(self) -> str:
+        return self.request.req_id
+
+    @property
+    def done(self) -> bool:
+        return self.request.state is ReqState.FINISHED
+
+    @property
+    def cancelled(self) -> bool:
+        return self.request.metrics.cancelled
+
+    @property
+    def status(self) -> str:
+        """``queued | running | finished | cancelled`` (coarse view of
+        the engine-level request state)."""
+        if self.cancelled:
+            return "cancelled"
+        if self.done:
+            return "finished"
+        if self.request.state is ReqState.WAITING and self.request.slot is None:
+            return "queued"
+        return "running"
+
+    def _subscribe(self) -> None:
+        """Start buffering live emissions, seeding the stream with every
+        token already delivered. Emitted history = tokens folded into the
+        prompt by preemption-recompute (they sit past the original
+        ``metrics.input_len``) + the current ``generated`` list, with one
+        timestamp each in ``first_token_time`` + ``token_times`` — exact
+        under every policy, so late subscribers miss nothing. Nothing is
+        buffered for handles nobody streams (batch ``run`` stays O(1) in
+        token memory)."""
+        self._streaming = True
+        m = self.request.metrics
+        if m.first_token_time is None:
+            return
+        hist = (list(self.request.prompt[m.input_len:])
+                + list(self.request.generated))
+        times = [m.first_token_time] + list(m.token_times)
+        self._stream.extend(zip(hist, times))
+
+    def tokens(self) -> Iterator[Tuple[int, float]]:
+        """Stream ``(token_id, sim_time)`` pairs as the request generates
+        them, advancing the whole cluster's simulated time as needed.
+        Ends after the final token, or immediately on cancellation."""
+        if not self._streaming:
+            self._subscribe()
+        while True:
+            while self._stream:
+                yield self._stream.popleft()
+            if self.done or self.cancelled:
+                return
+            if not self._service.step():
+                return      # cluster stalled with nothing left to do
+
+    def result(self) -> RequestMetrics:
+        """Block (in simulated time) until this request finishes or is
+        cancelled; returns its metrics."""
+        while not (self.done or self.cancelled):
+            if not self._service.step():
+                break
+        return self.request.metrics
+
+    def cancel(self) -> bool:
+        """Abort mid-flight: frees the request's slot and KV blocks
+        wherever it lives (pending, queued, prefilling on a PPI, in KV
+        transit, or decoding) and records the ``cancelled`` terminal
+        state. False if already finished/cancelled."""
+        return self._service.cancel(self)
+
+
+class InferenceService:
+    """Request-level online facade over a built cluster.
+
+    Drives :class:`~repro.cluster.runtime.ClusterRuntime` incrementally:
+    ``submit`` enqueues work at its ``arrival`` time, ``step`` executes
+    one event-loop round, ``step_until(t)`` advances simulated time,
+    ``drain`` runs everything to completion. ``run(requests)`` is the
+    legacy batch surface as a thin wrapper (submit-all + drain) and is
+    bit-identical on metrics to the builders' ``system.run(trace)``.
+    """
+
+    def __init__(self, endpoints: List[Endpoint], router: Router, *,
+                 spec: Optional[ServeSpec] = None, cfg=None, system=None):
+        self.runtime = ClusterRuntime(endpoints, router)
+        self.spec = spec
+        self.cfg = cfg
+        self.system = system          # the underlying builder product
+        self._pending: Deque[Request] = deque()
+        self._handles: Dict[str, RequestHandle] = {}
+        self._n_cancelled = 0
+        for eng in self.runtime.engines:
+            eng.on_token = self._on_token
+
+    def _on_token(self, req: Request, token: int, t: float) -> None:
+        # Engine.step emission hook: buffer into the request's handle for
+        # its tokens() stream — but only for subscribed handles, so plain
+        # batch replays retain no token history. PPI prefill views never
+        # emit (prefill-only path), so each delivered token arrives here
+        # exactly once.
+        h = self._handles.get(req.req_id)
+        if h is not None and h._streaming:
+            h._stream.append((token, t))
+
+    # ------------------------------------------------------------------
+    @property
+    def endpoints(self) -> List[Endpoint]:
+        return self.runtime.endpoints
+
+    @property
+    def engines(self):
+        return self.runtime.engines
+
+    @property
+    def now(self) -> float:
+        """Simulated time the cluster has reached (max engine clock)."""
+        return max((e.clock for e in self.runtime.engines), default=0.0)
+
+    @property
+    def n_submitted(self) -> int:
+        return len(self._handles)
+
+    @property
+    def n_cancelled(self) -> int:
+        return self._n_cancelled
+
+    @property
+    def n_finished(self) -> int:
+        return self.runtime.n_finished()
+
+    @property
+    def n_active(self) -> int:
+        """Submitted requests still owed a completion."""
+        return self.n_submitted - self._n_cancelled - self.n_finished
+
+    # ------------------------------------------------------------------
+    # the online surface
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> RequestHandle:
+        """Take ownership of a fresh request; it will be routed once
+        simulated time reaches ``request.arrival``."""
+        if request.req_id in self._handles:
+            raise ValueError(f"duplicate req_id {request.req_id!r}")
+        check_requests_fresh([request])
+        # keep pending sorted by arrival, stable for ties — the dispatch
+        # discipline ClusterRuntime.run's up-front sort establishes
+        i = len(self._pending)
+        while i > 0 and self._pending[i - 1].arrival > request.arrival:
+            i -= 1
+        self._pending.insert(i, request)
+        handle = RequestHandle(request, self)
+        self._handles[request.req_id] = handle
+        return handle
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        req = handle.request
+        if handle.done or handle.cancelled:
+            return False
+        if any(r is req for r in self._pending):      # never routed
+            self._pending = deque(r for r in self._pending if r is not req)
+            req.state = ReqState.CANCELLED
+            req.metrics.cancelled = True
+            req.metrics.cancel_time = self.now
+        else:
+            for ep in self.runtime.endpoints:
+                if ep.cancel(req):
+                    break
+            else:
+                return False
+        self._n_cancelled += 1
+        return True
+
+    def step(self) -> bool:
+        """One event-loop round; False when no progress is possible."""
+        return self.runtime.tick(self._pending)
+
+    def step_until(self, t: float, max_steps: int = 10_000_000) -> float:
+        """Advance the cluster through every action due at or before
+        simulated time ``t``; returns the time actually reached."""
+        steps = 0
+        while steps < max_steps:
+            nt = self.runtime.next_time(self._pending)
+            if nt is None or nt > t:
+                break
+            steps += 1
+            if not self.step():
+                break
+        return self.now
+
+    def drain(self, max_steps: int = 10_000_000) -> Dict[str, float]:
+        """Run until every non-cancelled submission finished; returns
+        aggregate metrics (see :meth:`metrics`)."""
+        steps = 0
+        while self.n_active > 0 and steps < max_steps:
+            steps += 1
+            if not self.step():
+                break
+        return self.metrics()
+
+    def metrics(self, ttft_slo: Optional[float] = None,
+                tbt_slo: Optional[float] = None) -> Dict[str, float]:
+        """Fleet QoE aggregate over everything terminal so far. Finished
+        requests feed throughput/latency; cancelled ones only the
+        ``cancelled`` count (they never enter throughput aggregates)."""
+        ms = [r.metrics for ep in self.runtime.endpoints
+              for r in ep.finished()]
+        ms += [h.request.metrics for h in self._handles.values()
+               if h.request.metrics.cancelled]
+        return aggregate(ms, ttft_slo, tbt_slo)
+
+    # ------------------------------------------------------------------
+    # the legacy batch surface
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request],
+            max_steps: int = 10_000_000) -> Dict[str, float]:
+        """Replay a whole trace: submit-all + drain. Metrics are
+        bit-identical to the legacy ``system.run(trace)`` of the
+        underlying builders."""
+        for r in requests:
+            self.submit(r)
+        return self.drain(max_steps)
+
+
+def serve(spec: ServeSpec, **replacements) -> InferenceService:
+    """Convenience one-liner: ``serve(spec, sched_policy="sarathi")``."""
+    if replacements:
+        spec = spec.replace(**replacements)
+    return spec.build()

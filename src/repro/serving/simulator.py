@@ -8,7 +8,6 @@ P99) and Table 3 (disaggregated load imbalance).
 """
 from __future__ import annotations
 
-import copy
 from typing import Dict, List
 
 from repro.core.balancer import Balancer
@@ -18,6 +17,7 @@ from repro.core.executor import NullExecutor
 from repro.core.predictor import profile_chunked, profile_prefill
 from repro.core.request import Request
 from repro.serving.hardware import DeviceModel, DeviceSpec
+from repro.serving.trace import Trace
 
 APPROACHES = ("cronus", "dp", "pp", "disagg_hl", "disagg_lh")
 
@@ -56,7 +56,7 @@ def build_system(approach: str, cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec,
 def run_approach(approach: str, cfg, hi_spec, lo_spec,
                  requests: List[Request], **kw) -> Dict[str, float]:
     system = build_system(approach, cfg, hi_spec, lo_spec, **kw)
-    return system.run([copy.deepcopy(r) for r in requests])
+    return system.run(Trace(requests).fresh())
 
 
 def compare_all(cfg, hi_spec, lo_spec, requests,

@@ -9,6 +9,7 @@ per seed.
 """
 from __future__ import annotations
 
+import copy
 from typing import List, Optional
 
 import numpy as np
@@ -17,6 +18,26 @@ from repro.core.request import Request
 
 AZURE_CONV_MEAN_IN = 1014
 AZURE_CONV_MEAN_OUT = 247
+
+
+class Trace(List[Request]):
+    """A replayable request list.
+
+    Engines mutate requests in place (state, generated tokens, shared
+    metrics objects), so handing the same ``Request`` objects to a second
+    system silently corrupts its run — the classic aliasing footgun this
+    class closes: ``ClusterRuntime.run`` refuses already-replayed
+    requests, and ``fresh()`` hands out deep copies so one trace can
+    drive any number of systems::
+
+        trace = make_trace(1000)
+        a = system_a.run(trace.fresh())
+        b = system_b.run(trace.fresh())
+    """
+
+    def fresh(self) -> "Trace":
+        """Deep copies of every request, safe to replay."""
+        return Trace(copy.deepcopy(r) for r in self)
 
 
 def synth_lengths(n: int, mean: float, sigma: float, rng, lo: int, hi: int):
@@ -31,7 +52,7 @@ def make_trace(n_requests: int = 1000, *, seed: int = 0,
                max_in: int = 8192, max_out: int = 1024,
                vocab_size: int = 32000,
                scale: float = 1.0,
-               sessions: Optional[int] = None) -> List[Request]:
+               sessions: Optional[int] = None) -> Trace:
     """interval=0 -> all requests at t=0 (max-throughput measurement).
     ``scale`` shrinks lengths for CPU-scale functional runs.
     ``sessions`` tags requests with conversation ids drawn from that many
@@ -41,7 +62,7 @@ def make_trace(n_requests: int = 1000, *, seed: int = 0,
                         max(int(4 * scale), 2), int(max_in * scale))
     outs = synth_lengths(n_requests, mean_out * scale, 0.6, rng,
                          max(int(2 * scale), 1), int(max_out * scale))
-    reqs = []
+    reqs = Trace()
     for i in range(n_requests):
         prompt = rng.integers(0, vocab_size, ins[i]).astype(np.int32)
         reqs.append(Request(req_id=f"r{i}", prompt=prompt,
@@ -60,7 +81,7 @@ def make_shared_prefix_trace(n_requests: int = 1000, *, seed: int = 0,
                              mean_out: float = AZURE_CONV_MEAN_OUT,
                              max_in: int = 4096, max_out: int = 1024,
                              vocab_size: int = 32000,
-                             scale: float = 1.0) -> List[Request]:
+                             scale: float = 1.0) -> Trace:
     """Multi-tenant shared-prefix workload: each request opens with one of
     ``n_prefixes`` common prefixes (system prompt / few-shot template) of
     ``prefix_len`` tokens, followed by a log-normal unique suffix. The
@@ -77,7 +98,7 @@ def make_shared_prefix_trace(n_requests: int = 1000, *, seed: int = 0,
     outs = synth_lengths(n_requests, mean_out * scale, 0.6, rng,
                          max(int(2 * scale), 1), int(max_out * scale))
     groups = rng.integers(0, n_prefixes, n_requests)
-    reqs = []
+    reqs = Trace()
     for i in range(n_requests):
         g = int(groups[i])
         suffix = rng.integers(0, vocab_size, sfx[i]).astype(np.int32)

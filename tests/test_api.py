@@ -1,0 +1,324 @@
+"""The online serving API: ServeSpec round-trips + validation, the
+InferenceService submit/stream/cancel/drain surface, equality of the new
+facade with the legacy ``system.run(trace)`` path, and the trace-aliasing
+guard."""
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import ReqState, Request
+from repro.serving.api import ServeSpec
+from repro.serving.hardware import A10, A100
+from repro.serving.simulator import APPROACHES, run_approach
+from repro.serving.trace import Trace, make_trace
+
+CFG = get_config("llama3-8b")
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec: serialization + validation
+# ---------------------------------------------------------------------------
+
+def test_spec_json_roundtrip():
+    spec = ServeSpec(approach="dp", hi="A100", lo="A30",
+                     sched_policy="sarathi", prefix_cache=True,
+                     max_slots=64, block_size=8)
+    blob = json.dumps(spec.to_dict())
+    assert ServeSpec.from_dict(json.loads(blob)) == spec
+
+
+def test_spec_roundtrip_defaults_and_cluster():
+    for spec in (ServeSpec(),
+                 ServeSpec(cluster="2xcronus:A100+A10,4xworker:A10@sjf",
+                           router="prefix_affinity")):
+        assert ServeSpec.from_dict(json.loads(
+            json.dumps(spec.to_dict()))) == spec
+
+
+def test_spec_from_dict_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown ServeSpec keys"):
+        ServeSpec.from_dict({"approach": "cronus", "warp_factor": 9})
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(arch="gpt5"), "unknown arch"),
+    (dict(approach="magic"), "unknown approach"),
+    (dict(hi="H100"), "unknown device"),
+    (dict(router="hash_ring"), "unknown router"),
+    (dict(sched_policy="edf"), "unknown sched policy"),
+    (dict(executor="cuda"), "unknown executor"),
+    (dict(cluster="9q:A10"), "bad node spec"),
+    (dict(executor="real", prefix_cache=True), "simulation-only"),
+    (dict(executor="real", cluster="2xworker:A10@cache"), "simulation-only"),
+    (dict(max_slots=0), "max_slots"),
+    (dict(s_kv=0), "s_kv"),
+    # dp/pp pin the paper's per-engine budgets; refuse a silently-ignored
+    # override instead of pretending it applied
+    (dict(approach="dp", max_batched_tokens=64), "fixed per-engine"),
+    (dict(approach="pp", max_batched_tokens=64), "fixed per-engine"),
+])
+def test_spec_validation_errors(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        ServeSpec(**kw)
+
+
+# ---------------------------------------------------------------------------
+# CLI <-> spec (flag drift fails loudly here)
+# ---------------------------------------------------------------------------
+
+def test_cli_covers_every_spec_field():
+    ap = argparse.ArgumentParser()
+    ServeSpec.add_cli_args(ap)
+    dests = {a.dest for a in ap._actions}
+    for f in dataclasses.fields(ServeSpec):
+        cli = {"executor": "real"}.get(f.name, f.name)
+        assert cli in dests, f"ServeSpec.{f.name} has no CLI flag"
+
+
+def test_from_cli_defaults_match_spec_defaults():
+    ap = argparse.ArgumentParser()
+    ServeSpec.add_cli_args(ap)
+    assert ServeSpec.from_cli(ap.parse_args([])) == ServeSpec()
+
+
+def test_from_cli_overrides_and_real_defaults():
+    ap = argparse.ArgumentParser()
+    ServeSpec.add_cli_args(ap)
+    spec = ServeSpec.from_cli(ap.parse_args(
+        ["--approach", "dp", "--sched-policy", "sarathi", "--prefix-cache",
+         "--max-slots", "64"]))
+    assert (spec.approach, spec.sched_policy, spec.prefix_cache,
+            spec.max_slots) == ("dp", "sarathi", True, 64)
+    real = ServeSpec.from_cli(ap.parse_args(["--real", "--smoke"]))
+    # --real keeps the historical CPU-scale engine sizing
+    assert (real.executor, real.max_slots, real.block_size) == ("real", 16, 4)
+
+
+def test_serve_cli_smoke():
+    """serve.py builds its system flags from ServeSpec.add_cli_args —
+    --help exercising the full parser catches argparse-level drift."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--help"],
+        capture_output=True, text=True, timeout=300, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    for flag in ("--cluster", "--sched-policy", "--stream", "--cancel-after",
+                 "--spec", "--dump-spec"):
+        assert flag in proc.stdout
+    # a missing spec file dies with a one-line message, not a traceback
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--spec", "/nonexistent/deploy.json"],
+        capture_output=True, text=True, timeout=300, env=env)
+    assert proc.returncode != 0
+    assert "bad serving spec" in proc.stderr
+    assert "Traceback" not in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# submit-all + drain == legacy run (the bit-identity contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("interval", [0.0, 1 / 7.0],
+                         ids=["maxtput", "staggered"])
+@pytest.mark.parametrize("approach", APPROACHES)
+def test_service_run_matches_legacy_run(approach, interval):
+    reqs = make_trace(50, seed=0, interval=interval)
+    legacy = run_approach(approach, CFG, A100, A10, reqs)
+    service = ServeSpec(approach=approach).build()
+    assert service.run(reqs.fresh()) == legacy
+
+
+def test_cluster_service_matches_cluster_run():
+    from repro.cluster import build_cluster
+    spec = "cronus:A100+A10,2xworker:A10"
+    reqs = make_trace(60, seed=2, interval=1 / 10.0)
+    legacy = build_cluster(CFG, spec, router="least_loaded").run(reqs.fresh())
+    service = ServeSpec(cluster=spec, router="least_loaded").build()
+    assert service.run(reqs.fresh()) == legacy
+
+
+def test_interleaved_step_until_matches_straight_drain():
+    """Incremental stepping is just the batch loop sliced differently:
+    step_until checkpoints must not change any metric."""
+    reqs = make_trace(40, seed=5, interval=0.25)
+    straight = ServeSpec(approach="cronus").build().run(reqs.fresh())
+    service = ServeSpec(approach="cronus").build()
+    for r in reqs.fresh():
+        service.submit(r)
+    for t in (1.0, 3.0, 5.0):
+        assert service.step_until(t) >= t or service.n_active == 0
+    assert service.drain() == straight
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+def test_stream_yields_output_len_tokens_in_order():
+    service = ServeSpec(approach="cronus").build()
+    reqs = make_trace(6, seed=3, interval=0.5)
+    handles = [service.submit(r) for r in reqs]
+    streams = {h.req_id: list(h.tokens()) for h in handles}
+    service.drain()
+    for h in handles:
+        toks = [tok for tok, _ in streams[h.req_id]]
+        times = [t for _, t in streams[h.req_id]]
+        assert len(toks) == h.request.output_len
+        assert toks == h.request.generated
+        assert times == sorted(times)
+        assert h.done and h.status == "finished"
+        # stream timestamps are the metric timestamps
+        m = h.request.metrics
+        assert times[0] == m.first_token_time
+        assert times[1:] == m.token_times
+
+
+def test_late_subscription_replays_full_history():
+    """tokens() first asked after the request already generated: the
+    stream still yields every token with its original timestamp."""
+    service = ServeSpec(approach="cronus").build()
+    reqs = make_trace(4, seed=11, interval=0.5)
+    handles = [service.submit(r) for r in reqs]
+    service.drain()                        # everything finished, unstreamed
+    for h in handles:
+        toks = list(h.tokens())
+        assert [tok for tok, _ in toks] == h.request.generated
+        m = h.request.metrics
+        assert [t for _, t in toks] == [m.first_token_time] + m.token_times
+
+
+def test_unstreamed_handles_buffer_no_tokens():
+    """Batch replay must not retain per-token history (memory: a 1000-
+    request trace is ~250k tokens) — buffering starts at subscription."""
+    service = ServeSpec(approach="cronus").build()
+    service.run(make_trace(5, seed=12, interval=0.0))
+    assert all(not h._stream for h in service._handles.values())
+
+
+def test_stream_works_on_disaggregated_first_token_at_ingest():
+    # disagg delivers the first token with the KV transfer (TTFT fairness
+    # rule) — the emission hook must still fire exactly once per token
+    service = ServeSpec(approach="disagg_lh").build()
+    reqs = make_trace(4, seed=7, interval=0.5)
+    handles = [service.submit(r) for r in reqs]
+    toks = list(handles[0].tokens())
+    assert len(toks) == handles[0].request.output_len
+    service.drain()
+    for h in handles:
+        assert len(h.request.generated) == h.request.output_len
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_frees_kv_blocks_and_stays_out_of_aggregates():
+    service = ServeSpec(cluster="worker:A10").build()
+    reqs = make_trace(5, seed=4, interval=0.0)
+    handles = [service.submit(r) for r in reqs]
+    stream = handles[0].tokens()
+    for _ in range(3):
+        next(stream)                       # resident and decoding
+    assert handles[0].cancel()
+    eng = service.engines[0]
+    assert eng.allocator.owned_blocks(reqs[0].req_id) == 0
+    eng.allocator.check_invariants()
+    assert handles[0].status == "cancelled"
+    assert handles[0].request.metrics.cancel_time is not None
+    assert not handles[0].cancel()         # idempotent: already terminal
+    m = service.drain()
+    assert m["completed"] == 4             # never in throughput aggregates
+    assert m["cancelled"] == 1
+    assert handles[0].request.metrics.finish_time is None
+    # every block returned to the pool once the cluster drained
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+    eng.allocator.check_invariants()
+
+
+def test_cancel_before_dispatch():
+    service = ServeSpec(cluster="worker:A10").build()
+    reqs = make_trace(3, seed=9, interval=0.0)
+    handles = [service.submit(r) for r in reqs]
+    assert handles[2].cancel()             # still pending, never routed
+    assert handles[2].status == "cancelled"
+    m = service.drain()
+    assert m["completed"] == 2 and m["cancelled"] == 1
+    assert handles[2].request.state is ReqState.CANCELLED
+
+
+def test_cancel_on_cronus_pair_mid_ppi():
+    service = ServeSpec(approach="cronus").build()
+    reqs = make_trace(5, seed=5, interval=0.0)
+    handles = [service.submit(r) for r in reqs]
+    service.step()
+    service.step()                         # head requests are in the PPI
+    assert handles[1].cancel()
+    m = service.drain()
+    assert m["completed"] == 4 and m["cancelled"] == 1
+    for eng in service.engines:
+        eng.allocator.check_invariants()
+        assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_cancel_mid_decode_on_cronus_pair():
+    service = ServeSpec(approach="cronus").build()
+    reqs = make_trace(5, seed=6, interval=0.0)
+    handles = [service.submit(r) for r in reqs]
+    stream = handles[0].tokens()
+    for _ in range(4):
+        next(stream)                       # decoding on the CPI
+    assert handles[0].cancel()
+    m = service.drain()
+    assert m["completed"] == 4 and m["cancelled"] == 1
+    for eng in service.engines:
+        eng.allocator.check_invariants()
+        assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# the trace-aliasing guard
+# ---------------------------------------------------------------------------
+
+def test_replaying_same_requests_raises():
+    reqs = make_trace(5, seed=8)
+    first = ServeSpec(approach="cronus").build()
+    first.run(reqs)
+    second = ServeSpec(approach="cronus").build()
+    with pytest.raises(ValueError, match="already replayed"):
+        second.run(reqs)
+    # legacy builder path refuses too (same shared loop)
+    from repro.core.cronus import build_cronus
+    from repro.core.executor import NullExecutor
+    from repro.serving.hardware import DeviceModel
+    sys_c = build_cronus(CFG, DeviceModel(A10, CFG), DeviceModel(A100, CFG),
+                         executor_factory=lambda role: NullExecutor())
+    with pytest.raises(ValueError, match="already replayed"):
+        sys_c.run(reqs)
+
+
+def test_trace_fresh_makes_reuse_safe():
+    reqs = make_trace(5, seed=8)
+    assert isinstance(reqs, Trace)
+    a = ServeSpec(approach="cronus").build().run(reqs.fresh())
+    b = ServeSpec(approach="cronus").build().run(reqs.fresh())
+    assert a == b
+    for r in reqs:                         # originals untouched
+        assert r.state is ReqState.WAITING and not r.generated
+
+
+def test_duplicate_submit_rejected():
+    service = ServeSpec(approach="cronus").build()
+    [r] = make_trace(1, seed=1)
+    service.submit(r)
+    with pytest.raises(ValueError, match="duplicate req_id"):
+        service.submit(Request(req_id=r.req_id, prompt=r.prompt[:4],
+                               output_len=2))
