@@ -6,14 +6,15 @@ from typing import Callable
 
 from repro.core.metrics import slo_attainment
 from repro.serving.trace import make_trace
+from repro.workloads import sweep as _sweep
 
-# Latency deadlines for goodput (SLO-attainment) reporting. Chosen from the
-# paper's Fig. 4 operating range on the Azure-conversation trace: a request
-# is "good" if its TTFT and its per-request P99 inter-token gap both land
-# under these. Scheduler ablations report goodput alongside raw throughput
-# so a policy can't win by starving the tail.
-DEFAULT_TTFT_SLO = 5.0    # seconds
-DEFAULT_TBT_SLO = 0.20    # seconds/token
+# Latency deadlines for goodput (SLO-attainment) reporting — canonical
+# values live in repro.workloads.sweep (the capacity search targets them);
+# re-exported here so every benchmark keeps importing them from one place.
+# Scheduler ablations report goodput alongside raw throughput so a policy
+# can't win by starving the tail.
+DEFAULT_TTFT_SLO = _sweep.DEFAULT_TTFT_SLO    # seconds
+DEFAULT_TBT_SLO = _sweep.DEFAULT_TBT_SLO      # seconds/token
 
 # the paper's evaluation grid (Table 2 / Fig. 4 columns)
 PAPER_GRID = [

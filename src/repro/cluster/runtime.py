@@ -257,6 +257,20 @@ class ClusterRuntime:
             cands.append(pending[0].arrival)
         return min(cands) if cands else None
 
+    def next_action_time(self, pending: Optional[deque] = None
+                         ) -> Optional[float]:
+        """Simulated time of the next *executed* action: the lagging
+        runnable engine's clock (what ``tick`` will step), or — only when
+        nothing is runnable — the idle-jump target ``next_time`` reports.
+        The open-loop driver gates live submissions on this rather than
+        ``next_time``: a queued ready-time can be earlier than every
+        runnable clock, and stopping on it would let an iteration *at or
+        past* the submission instant run before the request exists."""
+        run = [e.clock for e in self.engines if e.runnable()]
+        if run:
+            return min(run)
+        return self.next_time(pending)
+
     def run(self, requests: List[Request], max_steps: int = 10_000_000):
         """Replay a trace over the cluster; returns aggregate metrics."""
         check_requests_fresh(requests)

@@ -104,6 +104,11 @@ class Engine:
         output token."""
         slot = self._free_slot()
         assert slot is not None, "plan admitted with no free slot"
+        if req.metrics.service_start_time is None:
+            # first slot admission anywhere (PPI prefill views share the
+            # metrics object; preemption-recompute re-placements keep the
+            # original): the queueing/service boundary of TTFT
+            req.metrics.service_start_time = self.clock
         if self.allocator.prefix_cache and req.input_len > 1:
             if req.context_len == 0 and req.kv_payload is None:
                 shared = self.allocator.share_blocks(

@@ -17,6 +17,11 @@ class RequestMetrics:
     first_token_time: Optional[float] = None    # absolute time of first token
     token_times: List[float] = dataclasses.field(default_factory=list)
     finish_time: Optional[float] = None
+    # absolute time the request first won a KV slot on ANY engine (the PPI
+    # prefill view shares this object, so for Cronus it is PPI admission).
+    # Recorded unconditionally (inert for the seed aggregates); surfaced
+    # only through the opt-in queueing keys the open-loop driver requests.
+    service_start_time: Optional[float] = None
     cached_prefix_tokens: int = 0     # prompt tokens served from prefix cache
     # terminal state: a request either finishes (finish_time set) or is
     # cancelled mid-flight (cancelled set, finish_time stays None) —
@@ -27,6 +32,14 @@ class RequestMetrics:
     @property
     def ttft(self) -> float:
         return self.first_token_time - self.arrival
+
+    @property
+    def queueing_delay(self) -> Optional[float]:
+        """Arrival -> first slot admission on any engine: the part of TTFT
+        spent waiting rather than being served. None until admitted."""
+        if self.service_start_time is None:
+            return None
+        return self.service_start_time - self.arrival
 
     @property
     def tbts(self) -> List[float]:
@@ -66,10 +79,12 @@ def slo_attainment(reqs: List[RequestMetrics], ttft_slo: float,
 
 def aggregate(reqs: List[RequestMetrics],
               ttft_slo: Optional[float] = None,
-              tbt_slo: Optional[float] = None) -> Dict[str, float]:
-    """Fleet QoE summary. Passing both SLOs adds a ``goodput`` key (the
-    default call returns exactly the seed's dict, so existing run metrics
-    stay bit-identical)."""
+              tbt_slo: Optional[float] = None,
+              queueing: bool = False) -> Dict[str, float]:
+    """Fleet QoE summary. Passing both SLOs adds a ``goodput`` key;
+    ``queueing=True`` (requested only by the open-loop driver) adds the
+    queueing/service split of TTFT. The default call returns exactly the
+    seed's dict, so existing run metrics stay bit-identical."""
     done = [r for r in reqs if r.finish_time is not None and not r.cancelled]
     n_cancelled = sum(1 for r in reqs if r.cancelled)
     if not done:
@@ -77,6 +92,9 @@ def aggregate(reqs: List[RequestMetrics],
                "tbt_p99": float("nan"), "completed": 0}
         if n_cancelled:
             out["cancelled"] = n_cancelled
+        if queueing:
+            out.update(queueing_p50=float("nan"), queueing_p99=float("nan"),
+                       ttft_service_p99=float("nan"))
         if ttft_slo is not None and tbt_slo is not None:
             out["goodput"] = 0.0 if reqs else float("nan")
         return out
@@ -109,6 +127,17 @@ def aggregate(reqs: List[RequestMetrics],
         out["prefill_tokens_saved"] = saved
         out["prefix_cache_hit_rate"] = saved / max(
             sum(r.input_len for r in done), 1)
+    if queueing:
+        # TTFT = queueing (arrival -> first slot) + service (slot -> first
+        # token). Opt-in: only the open-loop driver asks, so closed-loop
+        # replay dicts stay byte-identical to the seed's.
+        qs = [q for r in done if (q := r.queueing_delay) is not None]
+        out["queueing_p50"] = percentile(qs, 50)
+        out["queueing_p99"] = percentile(qs, 99)
+        svc = [r.ttft - r.queueing_delay for r in done
+               if r.first_token_time is not None
+               and r.queueing_delay is not None]
+        out["ttft_service_p99"] = percentile(svc, 99)
     if ttft_slo is not None and tbt_slo is not None:
         out["goodput"] = slo_attainment(reqs, ttft_slo, tbt_slo)
     return out

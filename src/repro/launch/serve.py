@@ -24,6 +24,11 @@ Examples:
       --cluster "4xworker:A10" --prefix-cache --router prefix_affinity \
       --trace shared_prefix --n-requests 1000
 
+  # honest open-loop load: live submission at Poisson 6 QPS (reports the
+  # queueing/service split of TTFT alongside the usual tails):
+  PYTHONPATH=src python -m repro.launch.serve --approach cronus \
+      --arrival poisson:6 --n-requests 1000
+
   # stream the first request's tokens, cancel it after 32:
   PYTHONPATH=src python -m repro.launch.serve --approach cronus \
       --n-requests 50 --stream --cancel-after 32
@@ -46,6 +51,7 @@ import json
 from repro.configs import get_config
 from repro.serving.api import ServeSpec
 from repro.serving.trace import make_shared_prefix_trace, make_trace
+from repro.workloads import OpenLoopDriver
 
 
 def build_arg_parser() -> argparse.ArgumentParser:
@@ -91,15 +97,18 @@ def build_arg_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def _make_trace(args, vocab_size: int):
+def _make_trace(args, spec: ServeSpec, vocab_size: int):
+    if spec.arrival is not None and args.interval:
+        raise SystemExit("bad workload: pass either --interval (closed-loop "
+                         "fixed spacing) or --arrival (open-loop process), "
+                         "not both")
+    kw = dict(seed=args.seed, interval=args.interval, arrival=spec.arrival,
+              vocab_size=vocab_size, scale=args.scale)
     if args.trace == "shared_prefix":
         return make_shared_prefix_trace(
-            args.n_requests, seed=args.seed, interval=args.interval,
-            n_prefixes=args.prefix_groups, prefix_len=args.prefix_len,
-            vocab_size=vocab_size, scale=args.scale)
-    return make_trace(args.n_requests, seed=args.seed,
-                      interval=args.interval, vocab_size=vocab_size,
-                      scale=args.scale, sessions=args.sessions or None)
+            args.n_requests, n_prefixes=args.prefix_groups,
+            prefix_len=args.prefix_len, **kw)
+    return make_trace(args.n_requests, sessions=args.sessions or None, **kw)
 
 
 def main():
@@ -120,29 +129,41 @@ def main():
         return
 
     cfg = get_config(spec.arch, smoke=spec.smoke)
-    reqs = _make_trace(args, cfg.vocab_size)
+    reqs = _make_trace(args, spec, cfg.vocab_size)
     if spec.executor == "real" and spec.s_kv is None:
         spec = spec.replace(s_kv=int(
             max(r.input_len + r.output_len for r in reqs) + 8))
 
-    service = spec.build()
-    handles = [service.submit(r) for r in reqs]
+    if spec.arrival is not None:
+        # open-loop: live submission at each wall-time offset — the demo
+        # flags follow a single handle through a pre-submitted batch, which
+        # contradicts arrival-time submission, so they are refused
+        if args.stream or args.cancel_after is not None:
+            raise SystemExit("bad workload: --stream/--cancel-after demo the "
+                             "closed-loop replay path; they cannot follow an "
+                             "--arrival open-loop run")
+        driver = OpenLoopDriver(spec.build())
+        driver.run(reqs)
+        metrics = driver.metrics()
+    else:
+        service = spec.build()
+        handles = [service.submit(r) for r in reqs]
 
-    if args.stream or args.cancel_after is not None:
-        # online demo: follow the first request's token stream (this
-        # advances the whole cluster), optionally cancelling mid-flight
-        head = handles[0]
-        for n, (tok, t) in enumerate(head.tokens(), start=1):
-            if args.stream:
-                print(f"[{head.req_id} t={t:9.4f}s] token {n}/"
-                      f"{head.request.output_len}: {tok}")
-            if args.cancel_after is not None and n >= args.cancel_after:
-                head.cancel()
-                print(f"[{head.req_id}] cancelled after {n} tokens "
-                      f"(status={head.status})")
-                break
+        if args.stream or args.cancel_after is not None:
+            # online demo: follow the first request's token stream (this
+            # advances the whole cluster), optionally cancelling mid-flight
+            head = handles[0]
+            for n, (tok, t) in enumerate(head.tokens(), start=1):
+                if args.stream:
+                    print(f"[{head.req_id} t={t:9.4f}s] token {n}/"
+                          f"{head.request.output_len}: {tok}")
+                if args.cancel_after is not None and n >= args.cancel_after:
+                    head.cancel()
+                    print(f"[{head.req_id}] cancelled after {n} tokens "
+                          f"(status={head.status})")
+                    break
 
-    metrics = service.drain()
+        metrics = service.drain()
     print(json.dumps(metrics, indent=2))
     if args.out:
         with open(args.out, "w") as f:

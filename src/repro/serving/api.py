@@ -53,6 +53,7 @@ from repro.core.request import ReqState, Request
 from repro.scheduling import SCHEDULERS
 from repro.serving.hardware import DEVICES
 from repro.serving.simulator import APPROACHES, build_system
+from repro.workloads.arrivals import parse_arrival
 
 EXECUTORS = ("null", "real")
 
@@ -94,6 +95,10 @@ class ServeSpec:
     max_batched_tokens: int = 512         # chunked-prefill token budget
     s_kv: Optional[int] = None            # real executor: KV tokens per slot
     chunk_pad: Optional[int] = None       # real executor: pad chunks (jit)
+    # open-loop arrival process for workload driving (repro.workloads):
+    # "fixed:I" | "poisson:RATE" | "burst:RATE[:B[:ON]]" | "ramp:LO:HI[:P]".
+    # None = closed-loop trace replay (the historical behaviour).
+    arrival: Optional[str] = None
 
     def __post_init__(self):
         self.validate()
@@ -147,6 +152,8 @@ class ServeSpec:
                 "--cluster topologies")
         if self.s_kv is not None and self.s_kv < 1:
             raise ValueError("s_kv must be >= 1")
+        if self.arrival is not None:
+            parse_arrival(self.arrival)   # raises ValueError on bad specs
 
     # ------------------------------------------------------------------
     # serialization (JSON round-trip)
@@ -223,6 +230,12 @@ class ServeSpec:
         g.add_argument("--chunk-pad", type=int, default=None,
                        help="real executor: pad prefill chunks to this "
                             "multiple (fewer jit recompiles)")
+        g.add_argument("--arrival", default=cls._default("arrival"),
+                       metavar="PROC",
+                       help="open-loop arrival process: fixed:I | "
+                            "poisson:RATE | burst:RATE[:BURSTINESS"
+                            "[:MEAN_ON]] | ramp:LO:HI[:PERIOD] "
+                            "(default: closed-loop replay at --interval)")
 
     @classmethod
     def from_cli(cls, args) -> "ServeSpec":
@@ -238,7 +251,8 @@ class ServeSpec:
                    prefix_cache=args.prefix_cache, executor=executor,
                    max_slots=max_slots, block_size=block_size,
                    max_batched_tokens=args.max_batched_tokens,
-                   s_kv=args.s_kv, chunk_pad=args.chunk_pad)
+                   s_kv=args.s_kv, chunk_pad=args.chunk_pad,
+                   arrival=args.arrival)
 
     @classmethod
     def _default(cls, field: str):
@@ -510,14 +524,27 @@ class InferenceService:
         """One event-loop round; False when no progress is possible."""
         return self.runtime.tick(self._pending)
 
-    def step_until(self, t: float, max_steps: int = 10_000_000) -> float:
+    def step_until(self, t: float, max_steps: int = 10_000_000, *,
+                   strict: bool = False) -> float:
         """Advance the cluster through every action due at or before
-        simulated time ``t``; returns the time actually reached."""
+        simulated time ``t``; returns the time actually reached.
+        ``strict=True`` stops short of actions due exactly at ``t`` — the
+        open-loop driver uses it so a submission at ``t`` lands *before*
+        the tick that executes time ``t``, matching the closed loop's
+        dispatch-before-advance order within a tick. (Strict mode gates on
+        ``next_action_time`` — the clock of the iteration ``tick`` will
+        actually run — because ``next_time``'s delivery-only candidates
+        can sit earlier than every runnable engine.)"""
         steps = 0
         while steps < max_steps:
-            nt = self.runtime.next_time(self._pending)
-            if nt is None or nt > t:
-                break
+            if strict:
+                nt = self.runtime.next_action_time(self._pending)
+                if nt is None or nt >= t:
+                    break
+            else:
+                nt = self.runtime.next_time(self._pending)
+                if nt is None or nt > t:
+                    break
             steps += 1
             if not self.step():
                 break
@@ -534,15 +561,18 @@ class InferenceService:
         return self.metrics()
 
     def metrics(self, ttft_slo: Optional[float] = None,
-                tbt_slo: Optional[float] = None) -> Dict[str, float]:
+                tbt_slo: Optional[float] = None,
+                queueing: bool = False) -> Dict[str, float]:
         """Fleet QoE aggregate over everything terminal so far. Finished
         requests feed throughput/latency; cancelled ones only the
-        ``cancelled`` count (they never enter throughput aggregates)."""
+        ``cancelled`` count (they never enter throughput aggregates).
+        ``queueing=True`` (the open-loop driver's view) adds the
+        queueing/service split of TTFT."""
         ms = [r.metrics for ep in self.runtime.endpoints
               for r in ep.finished()]
         ms += [h.request.metrics for h in self._handles.values()
                if h.request.metrics.cancelled]
-        return aggregate(ms, ttft_slo, tbt_slo)
+        return aggregate(ms, ttft_slo, tbt_slo, queueing=queueing)
 
     # ------------------------------------------------------------------
     # the legacy batch surface

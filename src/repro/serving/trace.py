@@ -6,18 +6,48 @@ fixed interval (latency runs) or all at t=0 (max-throughput runs). The trace
 file is not redistributable, so we generate statistically matched synthetic
 traces: log-normal lengths calibrated to the published means, deterministic
 per seed.
+
+Arrival assignment is delegated to :mod:`repro.workloads.arrivals`: pass
+``arrival="poisson:6"`` (or any :class:`~repro.workloads.arrivals.
+ArrivalProcess`) for open-loop traffic models; the ``interval=`` keyword
+survives as a back-compat alias for ``fixed:INTERVAL``. Lengths and
+arrivals draw from independent rng streams, so the same seed yields the
+same request bodies under every arrival model.
 """
 from __future__ import annotations
 
 import copy
-from typing import List, Optional
+from typing import List, Optional, Union
 
 import numpy as np
 
 from repro.core.request import Request
+from repro.workloads.arrivals import ArrivalProcess, FixedInterval, \
+    parse_arrival
 
 AZURE_CONV_MEAN_IN = 1014
 AZURE_CONV_MEAN_OUT = 247
+
+# arrivals draw from their own seed stream ("ARRV") so the length samplers
+# below consume exactly the seed's draws regardless of the arrival model
+_ARRIVAL_STREAM = 0x41525256
+
+ArrivalLike = Union[ArrivalProcess, str, None]
+
+
+def _resolve_arrival(arrival: ArrivalLike, interval: float) -> ArrivalProcess:
+    if arrival is None:
+        return FixedInterval(interval)
+    if interval:
+        raise ValueError("pass either interval= (back-compat fixed spacing) "
+                         "or arrival=, not both")
+    return parse_arrival(arrival)
+
+
+def _arrival_times(arrival: ArrivalLike, interval: float, n: int,
+                   seed: int) -> np.ndarray:
+    proc = _resolve_arrival(arrival, interval)
+    return proc.times(n, np.random.default_rng([_ARRIVAL_STREAM, seed]))
 
 
 class Trace(List[Request]):
@@ -45,29 +75,48 @@ def synth_lengths(n: int, mean: float, sigma: float, rng, lo: int, hi: int):
     return np.clip(rng.lognormal(mu, sigma, n).astype(int), lo, hi)
 
 
+def sample_lengths(rng, n: int, *, mean_in: float, mean_out: float,
+                   max_in: int, max_out: int, scale: float = 1.0):
+    """The shared (input, output) length sampler both trace generators
+    draw from: log-normal with σ=1.0 on inputs and σ=0.6 on outputs,
+    calibrated so E[in]=mean_in / E[out]=mean_out, clipped to the device-
+    survivable range. ``scale`` shrinks everything proportionally for
+    CPU-scale functional runs. Consumes exactly two draws from ``rng``
+    (inputs first), byte-identical to the seed's inline sampling."""
+    ins = synth_lengths(n, mean_in * scale, 1.0, rng,
+                        max(int(4 * scale), 2), int(max_in * scale))
+    outs = synth_lengths(n, mean_out * scale, 0.6, rng,
+                         max(int(2 * scale), 1), int(max_out * scale))
+    return ins, outs
+
+
 def make_trace(n_requests: int = 1000, *, seed: int = 0,
                interval: float = 0.0,
+               arrival: ArrivalLike = None,
                mean_in: float = AZURE_CONV_MEAN_IN,
                mean_out: float = AZURE_CONV_MEAN_OUT,
                max_in: int = 8192, max_out: int = 1024,
                vocab_size: int = 32000,
                scale: float = 1.0,
                sessions: Optional[int] = None) -> Trace:
-    """interval=0 -> all requests at t=0 (max-throughput measurement).
-    ``scale`` shrinks lengths for CPU-scale functional runs.
-    ``sessions`` tags requests with conversation ids drawn from that many
-    sessions (round-robin), for session-affinity routing experiments."""
+    """``arrival`` names the traffic model (an ``ArrivalProcess`` or a
+    spec string such as ``"poisson:6"``); ``interval=I`` is the
+    back-compat alias for ``fixed:I`` (0 -> all requests at t=0, the
+    max-throughput measurement). ``scale`` shrinks lengths for CPU-scale
+    functional runs. ``sessions`` tags requests with conversation ids
+    drawn from that many sessions (round-robin), for session-affinity
+    routing experiments."""
     rng = np.random.default_rng(seed)
-    ins = synth_lengths(n_requests, mean_in * scale, 1.0, rng,
-                        max(int(4 * scale), 2), int(max_in * scale))
-    outs = synth_lengths(n_requests, mean_out * scale, 0.6, rng,
-                         max(int(2 * scale), 1), int(max_out * scale))
+    ins, outs = sample_lengths(rng, n_requests, mean_in=mean_in,
+                               mean_out=mean_out, max_in=max_in,
+                               max_out=max_out, scale=scale)
+    arrivals = _arrival_times(arrival, interval, n_requests, seed)
     reqs = Trace()
     for i in range(n_requests):
         prompt = rng.integers(0, vocab_size, ins[i]).astype(np.int32)
         reqs.append(Request(req_id=f"r{i}", prompt=prompt,
                             output_len=int(outs[i]),
-                            arrival=i * interval,
+                            arrival=float(arrivals[i]),
                             session=(f"s{i % sessions}" if sessions
                                      else None)))
     return reqs
@@ -75,6 +124,7 @@ def make_trace(n_requests: int = 1000, *, seed: int = 0,
 
 def make_shared_prefix_trace(n_requests: int = 1000, *, seed: int = 0,
                              interval: float = 0.0,
+                             arrival: ArrivalLike = None,
                              n_prefixes: int = 8,
                              prefix_len: int = 512,
                              mean_suffix_in: float = 256,
@@ -93,11 +143,11 @@ def make_shared_prefix_trace(n_requests: int = 1000, *, seed: int = 0,
     p_len = max(int(prefix_len * scale), 2)
     prefixes = [rng.integers(0, vocab_size, p_len).astype(np.int32)
                 for _ in range(n_prefixes)]
-    sfx = synth_lengths(n_requests, mean_suffix_in * scale, 1.0, rng,
-                        max(int(4 * scale), 2), int(max_in * scale))
-    outs = synth_lengths(n_requests, mean_out * scale, 0.6, rng,
-                         max(int(2 * scale), 1), int(max_out * scale))
+    sfx, outs = sample_lengths(rng, n_requests, mean_in=mean_suffix_in,
+                               mean_out=mean_out, max_in=max_in,
+                               max_out=max_out, scale=scale)
     groups = rng.integers(0, n_prefixes, n_requests)
+    arrivals = _arrival_times(arrival, interval, n_requests, seed)
     reqs = Trace()
     for i in range(n_requests):
         g = int(groups[i])
@@ -105,6 +155,6 @@ def make_shared_prefix_trace(n_requests: int = 1000, *, seed: int = 0,
         reqs.append(Request(req_id=f"r{i}",
                             prompt=np.concatenate([prefixes[g], suffix]),
                             output_len=int(outs[i]),
-                            arrival=i * interval,
+                            arrival=float(arrivals[i]),
                             session=f"p{g}"))
     return reqs

@@ -1,0 +1,22 @@
+"""Open-loop workload subsystem: arrival processes, a live-submission
+driver over :class:`~repro.serving.api.InferenceService`, and the rate
+sweep / SLO capacity search built on them. See the module docstrings of
+:mod:`repro.workloads.arrivals`, :mod:`repro.workloads.driver` and
+:mod:`repro.workloads.sweep`."""
+from repro.workloads.arrivals import (ARRIVAL_KINDS, ArrivalProcess,
+                                      BurstyProcess, DiurnalRamp,
+                                      FixedInterval, PoissonProcess,
+                                      parse_arrival)
+from repro.workloads.driver import OpenLoopDriver
+from repro.workloads.sweep import (DEFAULT_TBT_SLO, DEFAULT_TTFT_SLO,
+                                   CapacityResult, capacity_search,
+                                   find_capacity, open_loop_measure,
+                                   rate_sweep)
+
+__all__ = [
+    "ARRIVAL_KINDS", "ArrivalProcess", "BurstyProcess", "DiurnalRamp",
+    "FixedInterval", "PoissonProcess", "parse_arrival",
+    "OpenLoopDriver",
+    "DEFAULT_TBT_SLO", "DEFAULT_TTFT_SLO", "CapacityResult",
+    "capacity_search", "find_capacity", "open_loop_measure", "rate_sweep",
+]

@@ -62,6 +62,8 @@ def test_spec_from_dict_rejects_unknown_keys():
     # override instead of pretending it applied
     (dict(approach="dp", max_batched_tokens=64), "fixed per-engine"),
     (dict(approach="pp", max_batched_tokens=64), "fixed per-engine"),
+    (dict(arrival="warp:9"), "unknown arrival process"),
+    (dict(arrival="poisson:-3"), "rate > 0"),
 ])
 def test_spec_validation_errors(kw, msg):
     with pytest.raises(ValueError, match=msg):
@@ -98,6 +100,10 @@ def test_from_cli_overrides_and_real_defaults():
     real = ServeSpec.from_cli(ap.parse_args(["--real", "--smoke"]))
     # --real keeps the historical CPU-scale engine sizing
     assert (real.executor, real.max_slots, real.block_size) == ("real", 16, 4)
+    open_loop = ServeSpec.from_cli(ap.parse_args(["--arrival", "poisson:6"]))
+    assert open_loop.arrival == "poisson:6"
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        ServeSpec.from_cli(ap.parse_args(["--arrival", "warp:9"]))
 
 
 def test_serve_cli_smoke():
@@ -111,7 +117,7 @@ def test_serve_cli_smoke():
         capture_output=True, text=True, timeout=300, env=env)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     for flag in ("--cluster", "--sched-policy", "--stream", "--cancel-after",
-                 "--spec", "--dump-spec"):
+                 "--spec", "--dump-spec", "--arrival"):
         assert flag in proc.stdout
     # a missing spec file dies with a one-line message, not a traceback
     proc = subprocess.run(
