@@ -1,0 +1,177 @@
+"""Elastic autoscaling under a diurnal ramp: SLO attainment per
+device-second, autoscaled vs statically provisioned.
+
+The experiment the autoscaler exists for: drive the same sinusoidal
+ramp (``ramp:LO:HI:PERIOD`` — trough, peak, trough) through three rigs:
+
+  * ``static_peak`` — a fixed fleet sized for the peak (cronus A100+A10
+    pair + 2 A10 workers); meets the SLO everywhere but pays for peak
+    capacity through the trough;
+  * ``static_trough`` — the pair alone; cheap, but the peak buries it;
+  * ``autoscaled`` — the pair plus an idle rack of 2 A10s, scaled by the
+    SLO-driven policy loop (attach at the peak's queue build-up, detach
+    in the trough's idle window).
+
+Costs come from the autoscaler's :class:`DeviceLedger` (A100-equivalent
+device-seconds, peak-FLOPS-normalized); static rigs are priced with the
+same unit costs over their whole makespan. ``cost_efficiency`` — SLO-met
+requests per A100-equivalent device-second — is the gated headline: the
+autoscaled rig must match static-peak goodput while measurably beating
+its cost, and this benchmark FAILS (exit 1) if it doesn't.
+
+Template capacity seeds come from the committed open-loop capacity
+search (BENCH_open_loop.json: cronus burst capacity ~5.3 QPS; the A10
+worker uses the FLOPS-proportional prior).
+
+Row keys for the regression gate: ``rig`` + ``trace``
+(``ramp{LO}-{HI}@{PERIOD}s``).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_autoscale [--quick]
+[--out BENCH_autoscale.json]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from benchmarks.common import DEFAULT_TBT_SLO, DEFAULT_TTFT_SLO
+from repro.autoscale import (Autoscaler, DeviceInventory, EndpointTemplate,
+                             UNIT_COST, endpoint_devices, parse_autoscale)
+from repro.serving.api import ServeSpec
+from repro.serving.trace import make_trace
+from repro.workloads import OpenLoopDriver
+
+RAMP_LO, RAMP_HI = 1.0, 12.0
+RACK = "A100:1"                    # idle devices the autoscaler may use
+POLICY = ("slo:goodput>=0.9:cooldown=8:window=8:up_age=1.0"
+          ":down_busy=0.5:eval=0.5")
+# find_capacity-derived seed for the pair (benchmarks/baselines/
+# BENCH_open_loop.json: the bursty-arrival capacity — a ramp peak is
+# closer to a burst than to smooth Poisson); workers use the
+# FLOPS-proportional prior (A100 ~4.1 QPS, A10 ~1.6 QPS)
+CAPACITY_SEED = {"cronus:A100+A10": 5.3125}
+
+STATIC_RIGS = {
+    "static_peak": "cronus:A100+A10,worker:A100",
+    "static_trough": "cronus:A100+A10",
+}
+
+GATE_KEYS = ("throughput", "ttft_p99", "tbt_p99", "goodput", "completed")
+
+
+def _arrival(period: float) -> str:
+    return f"ramp:{RAMP_LO!r}:{RAMP_HI!r}:{period!r}"
+
+
+def _static_cost(service) -> float:
+    rate = sum(UNIT_COST[d] for ep in service.endpoints
+               for d in endpoint_devices(ep))
+    return rate * service.now
+
+
+def _measure(rig: str, service, reqs, n: int, period: float) -> Dict:
+    driver = OpenLoopDriver(service)
+    driver.run(reqs)
+    m = driver.metrics(DEFAULT_TTFT_SLO, DEFAULT_TBT_SLO)
+    scaler = service.autoscaler
+    if scaler is not None:
+        rep = scaler.report(service.now)
+        cost = rep["device_cost"]
+        secs = rep["device_seconds"]
+        extra = {"n_scale_ups": rep["n_scale_ups"],
+                 "n_scale_downs": rep["n_scale_downs"],
+                 "final_endpoints": rep["final_endpoints"]}
+    else:
+        cost = _static_cost(service)
+        secs = {}
+        for ep in service.endpoints:
+            for d in endpoint_devices(ep):
+                secs[d] = round(secs.get(d, 0.0) + service.now, 6)
+        extra = {}
+    row = {"rig": rig, "trace": f"ramp{RAMP_LO:g}-{RAMP_HI:g}@{period:g}s",
+           "ttft_slo": DEFAULT_TTFT_SLO, "tbt_slo": DEFAULT_TBT_SLO,
+           **{k: m[k] for k in GATE_KEYS},
+           "device_seconds": secs, "device_cost": round(cost, 6),
+           # the headline: SLO-met requests per A100-equivalent
+           # device-second — capacity you paid for but didn't need counts
+           # against you
+           "cost_efficiency": round(m["goodput"] * n / cost, 6),
+           **extra}
+    print(f"autoscale/{rig},0,goodput={m['goodput']:.3f} "
+          f"ttft_p99={m['ttft_p99']:.3f} cost={cost:.1f}A100s "
+          f"eff={row['cost_efficiency']:.4f}"
+          + (f" ups={extra['n_scale_ups']} downs={extra['n_scale_downs']}"
+             if extra else ""))
+    return row
+
+
+def run(n: int, period: float, seed: int = 0,
+        out_path: str = None) -> List[Dict]:
+    arrival = _arrival(period)
+
+    def fresh_requests():
+        return make_trace(n, seed=seed, arrival=arrival)
+
+    rows: List[Dict] = []
+    for rig, cluster in STATIC_RIGS.items():
+        service = ServeSpec(cluster=cluster, arrival=arrival).build()
+        rows.append(_measure(rig, service, fresh_requests(), n, period))
+
+    # same router as the cluster rigs: the single-pair default (weighted
+    # round-robin) cannot weight endpoints that join after build, so an
+    # elastic fleet needs load-aware routing
+    service = ServeSpec(approach="cronus", arrival=arrival,
+                        router="least_loaded").build()
+    inv = DeviceInventory.parse(RACK)
+    templates = [
+        EndpointTemplate("worker:A100", 4.056),
+        EndpointTemplate("cronus:A100+A10",
+                         CAPACITY_SEED["cronus:A100+A10"]),
+    ]
+    service.attach_autoscaler(Autoscaler(
+        inv, templates=templates, policy=parse_autoscale(POLICY)))
+    rows.append(_measure("autoscaled", service, fresh_requests(), n, period))
+
+    _enforce(rows)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {out_path}")
+    return rows
+
+
+def _enforce(rows: List[Dict]) -> None:
+    """The claim this benchmark gates: elasticity matches peak-sized
+    goodput at measurably lower device cost."""
+    by_rig = {r["rig"]: r for r in rows}
+    auto, peak = by_rig["autoscaled"], by_rig["static_peak"]
+    print(f"# autoscaled: goodput {auto['goodput']:.3f} vs peak "
+          f"{peak['goodput']:.3f}, cost {auto['device_cost']:.1f} vs "
+          f"{peak['device_cost']:.1f} A100-seconds")
+    if auto["goodput"] < peak["goodput"] - 0.02:
+        raise SystemExit(
+            f"FAIL: autoscaled goodput {auto['goodput']:.3f} below "
+            f"static-peak {peak['goodput']:.3f}")
+    if auto["device_cost"] > 0.92 * peak["device_cost"]:
+        raise SystemExit(
+            f"FAIL: autoscaled device cost {auto['device_cost']:.1f} not "
+            f"measurably below static-peak {peak['device_cost']:.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace / shorter ramp period (CI smoke)")
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write rows as JSON (e.g. BENCH_autoscale.json)")
+    args = ap.parse_args()
+    n = args.n_requests or (150 if args.quick else 400)
+    period = 40.0 if args.quick else 90.0
+    run(n=n, period=period, seed=args.seed, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,7 @@ import math
 import os
 import sys
 
-LOWER_IS_BAD = ("throughput", "goodput")
+LOWER_IS_BAD = ("throughput", "goodput", "cost_efficiency")
 HIGHER_IS_BAD = ("ttft_p99", "tbt_p99")
 KEY_FIELDS = ("rig", "trace", "policy", "router", "cache")
 

@@ -131,6 +131,47 @@ class CronusPairEndpoint(Endpoint):
             else:
                 target.add_request(orig)
 
+    def drain(self) -> List[Request]:
+        """Evict the pair's whole population for recompute elsewhere
+        (endpoint detach). Requests live in three places:
+
+          * as a *view* in the PPI (queued, mid-prefill, or completed but
+            unpumped in ``completed_prefills``) — the view is discarded
+            and the original recomputes from scratch (its partial KV
+            lives on the departing PPI, so the handoff cannot complete);
+          * delivered to the CPI (queued handoff, TRANSFER, PREFILL, or
+            decoding) — residents leave via preemption-by-recompute
+            (generated tokens folded into the prompt), queued handoffs
+            drop their payload;
+          * as an offloaded decoder back on the PPI — same as the CPI
+            case.
+
+        Returns the displaced originals, stripped of every pair-local
+        artifact, ready to re-route anywhere."""
+        displaced: List[Request] = []
+        for rid, orig in list(self._in_ppi.items()):
+            del self._in_ppi[rid]
+            self._offloaded.discard(rid)
+            if self.ppi.remove_request(rid) is None:
+                # the view finished its partial prefill and awaits pump:
+                # drop it (its PPI blocks were freed at completion)
+                self.ppi.completed_prefills = [
+                    (t, v) for t, v in self.ppi.completed_prefills
+                    if v.req_id != rid]
+            orig.partial_len = 0
+            orig.kv_payload = None
+            orig.first_token = None
+            orig.local_payload = False
+            orig.context_len = 0
+            orig.state = ReqState.WAITING
+            orig.ready_time = orig.arrival
+            displaced.append(orig)
+        for eng in (self.cpi, self.ppi):
+            for r in eng.drain_requests():
+                self._offloaded.discard(r.req_id)
+                displaced.append(r)
+        return displaced
+
     def cancel(self, req: Request) -> bool:
         """Mid-flight cancel across the pair: the request may live as a
         PPI prefill view (queued, resident, or completed-but-unpumped),

@@ -45,6 +45,12 @@ class Router(abc.ABC):
                endpoints: Sequence[Endpoint]) -> Optional[Endpoint]:
         """Endpoint to serve ``req``, or ``None`` to retry later."""
 
+    def on_membership_change(self, endpoints: Sequence[Endpoint]) -> None:
+        """The cluster attached or detached an endpoint (elastic
+        autoscaling): drop or remap any per-endpoint routing state so the
+        next ``select`` neither KeyErrors nor routes to a ghost. Stateless
+        routers need nothing; the default is a no-op."""
+
 
 class RoundRobinRouter(Router):
     def __init__(self, weights: Optional[List[int]] = None):
@@ -68,6 +74,16 @@ class RoundRobinRouter(Router):
                 self._idx = (self._idx + probe + 1) % len(pat)
                 return ep
         return None
+
+    def on_membership_change(self, endpoints):
+        # the pattern is positional, so it must be rebuilt for the new
+        # membership; explicit weights were given for a specific fleet
+        # size and cannot be remapped onto a different one — degrade to
+        # uniform rotation rather than raising on the next select
+        self._pattern = None
+        self._idx = 0
+        if self.weights is not None and len(self.weights) != len(endpoints):
+            self.weights = None
 
 
 class LeastLoadedRouter(Router):
@@ -131,6 +147,17 @@ class SessionAffinityRouter(Router):
             self._stalls.pop(sess, None)
         return ep
 
+    def on_membership_change(self, endpoints):
+        # un-home sessions whose endpoint left the cluster: they re-pin
+        # through the fallback on their next request instead of sticking
+        # to (and stalling on) a ghost endpoint
+        live = set(map(id, endpoints))
+        dead = [s for s, ep in self._table.items() if id(ep) not in live]
+        for s in dead:
+            del self._table[s]
+            self._stalls.pop(s, None)
+        self.fallback.on_membership_change(endpoints)
+
 
 class PrefixAffinityRouter(Router):
     """Route toward the endpoint holding the longest cached prefix of the
@@ -160,7 +187,11 @@ class PrefixAffinityRouter(Router):
         self.min_match = min_match
         self.max_imbalance = max_imbalance
         self.history_per_endpoint = history_per_endpoint
-        self._history: List[OrderedDict] = []    # per endpoint: hash -> True
+        # keyed by endpoint NAME, not list position: positions shift when
+        # the cluster attaches/detaches endpoints (elastic autoscaling),
+        # and a positional table would silently credit one endpoint with
+        # another's routing history
+        self._history: Dict[str, OrderedDict] = {}   # name -> hash -> True
 
     def _prompt_hashes(self, req, block_size: int) -> List[bytes]:
         hashes, h = [], b""
@@ -170,11 +201,11 @@ class PrefixAffinityRouter(Router):
             hashes.append(h)
         return hashes
 
-    def _history_match(self, i: int, hashes: List[bytes],
+    def _history_match(self, name: str, hashes: List[bytes],
                       block_size: int) -> int:
-        if i >= len(self._history):
+        seen = self._history.get(name)
+        if seen is None:
             return 0
-        seen = self._history[i]
         n = 0
         for h in hashes:
             if h not in seen:
@@ -182,10 +213,8 @@ class PrefixAffinityRouter(Router):
             n += block_size
         return n
 
-    def _record(self, i: int, hashes: List[bytes]):
-        while len(self._history) <= i:
-            self._history.append(OrderedDict())
-        seen = self._history[i]
+    def _record(self, name: str, hashes: List[bytes]):
+        seen = self._history.setdefault(name, OrderedDict())
         for h in hashes:
             seen.pop(h, None)
             seen[h] = True                       # re-insert at MRU end
@@ -195,27 +224,34 @@ class PrefixAffinityRouter(Router):
     def select(self, req, endpoints):
         bs = endpoints[0].engines[-1].ecfg.block_size
         hashes = self._prompt_hashes(req, bs)
-        cands = [(i, ep) for i, ep in enumerate(endpoints)
-                 if ep.can_accept(req)]
+        cands = [ep for ep in endpoints if ep.can_accept(req)]
         if not cands:
             return None
-        best, best_i, best_len = None, None, self.min_match - 1
-        for i, ep in cands:
+        best, best_len = None, self.min_match - 1
+        for ep in cands:
             n = max(ep.cached_prefix_tokens(req),
-                    self._history_match(i, hashes, bs))
+                    self._history_match(ep.name, hashes, bs))
             if n > best_len:
-                best, best_i, best_len = ep, i, n
+                best, best_len = ep, n
         if best is not None:
             # affinity is only worth the skew while the matched endpoint
             # is roughly competitive on load
-            floor = min(ep.stats().queue_depth for _, ep in cands)
+            floor = min(ep.stats().queue_depth for ep in cands)
             if best.stats().queue_depth <= floor + self.max_imbalance:
-                self._record(best_i, hashes)
+                self._record(best.name, hashes)
                 return best
         ep = self.fallback.select(req, endpoints)
         if ep is not None:
-            self._record(endpoints.index(ep), hashes)
+            self._record(ep.name, hashes)
         return ep
+
+    def on_membership_change(self, endpoints):
+        # forget detached endpoints' histories (their KV left with them);
+        # a re-attached name starts cold, which is exactly its cache state
+        live = {ep.name for ep in endpoints}
+        for name in [n for n in self._history if n not in live]:
+            del self._history[name]
+        self.fallback.on_membership_change(endpoints)
 
 
 ROUTERS = {

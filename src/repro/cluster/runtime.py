@@ -39,10 +39,20 @@ from repro.core.request import ReqState, Request
 
 @dataclasses.dataclass(frozen=True)
 class EndpointStats:
-    """Load snapshot the routers use (free KV blocks via ``Engine.stats``)."""
+    """Load snapshot the routers and the autoscaler read.
+
+    ``busy_frac`` is the max over the endpoint's engines of the fraction
+    of the trailing ``Engine.BUSY_WINDOW`` simulated seconds spent
+    executing iterations (max, not mean: a pair whose CPI is saturated is
+    busy no matter how idle its PPI runs — scale-down must wait for both).
+    ``oldest_queued_age`` is how long the oldest still-queued request has
+    waited since its arrival — the leading signal that the endpoint mix
+    is underprovisioned, visible long before goodput degrades."""
     queue_depth: int        # queued + resident, not yet finished
     free_kv_blocks: int     # free blocks on the endpoint's decode engine
     clock: float            # max engine clock (how far this endpoint has run)
+    busy_frac: float = 0.0          # utilization over the trailing window
+    oldest_queued_age: float = 0.0  # seconds the oldest queued request waited
 
 
 class Endpoint(abc.ABC):
@@ -103,11 +113,26 @@ class Endpoint(abc.ABC):
         queued = sum(len(e.queue) for e in engines) + sum(
             1 for e in engines for r in e.slots if r is not None)
         decode = engines[-1]   # pairs put the decode engine last
+        clock = max(e.clock for e in engines)
+        arrivals = [r.arrival for e in engines for r in e.queue]
         return EndpointStats(
             queue_depth=queued,
             free_kv_blocks=decode.stats().free_kv_blocks,
-            clock=max(e.clock for e in engines),
+            clock=clock,
+            busy_frac=max(e.busy_fraction() for e in engines),
+            oldest_queued_age=(max(clock - min(arrivals), 0.0)
+                               if arrivals else 0.0),
         )
+
+    def drain(self) -> List[Request]:
+        """Evict every resident and queued request for recompute elsewhere
+        (endpoint detach). Residents leave via preemption-by-recompute —
+        generated tokens folded into the prompt, KV freed — and everything
+        queued is stripped of engine-local state, because any KV or
+        payload it references lives on the hardware being removed. Returns
+        the displaced requests (``finished()`` is untouched); afterwards
+        the endpoint holds no work and allocator invariants are clean."""
+        return [r for e in self.engines for r in e.drain_requests()]
 
 
 class WorkerEndpoint(Endpoint):
@@ -161,6 +186,11 @@ class ClusterRuntime:
                                       for e in ep.engines]
         self._events: List[_Event] = []
         self._seq = itertools.count()
+        # completions that outlive their endpoint: detach_endpoint moves
+        # the departing endpoint's finished requests here so fleet metrics
+        # and the n_finished termination condition never lose them
+        self.retired: List[Request] = []
+        self._draining: set = set()   # endpoint names closed to routing
 
     # ------------------------------------------------------------------
     # timed events
@@ -180,17 +210,92 @@ class ClusterRuntime:
             heapq.heappop(self._events).fn()
 
     # ------------------------------------------------------------------
+    # live membership (elastic autoscaling)
+    # ------------------------------------------------------------------
+    def attach_endpoint(self, ep: Endpoint, now: Optional[float] = None):
+        """Add ``ep`` to the live cluster. Its engines' clocks are pulled
+        forward to ``now`` (default: the cluster's current max clock) so a
+        freshly attached endpoint can never execute in the simulated past,
+        and the router is told membership changed."""
+        if any(e.name == ep.name for e in self.endpoints):
+            raise ValueError(f"duplicate endpoint name {ep.name!r}")
+        if now is None:
+            now = max((e.clock for e in self.engines), default=0.0)
+        for eng in ep.engines:
+            eng.clock = max(eng.clock, now)
+            eng.busy_since = eng.clock
+        self.endpoints.append(ep)
+        self.engines = [e for ep_ in self.endpoints for e in ep_.engines]
+        self.router.on_membership_change(self.endpoints)
+
+    def detach_endpoint(self, name: str,
+                        pending: Optional[deque] = None) -> Endpoint:
+        """Remove endpoint ``name`` from the live cluster, losing no work:
+        the endpoint is first marked unroutable, its residents are drained
+        via the preemption-by-recompute path (generated tokens folded into
+        the prompt; in-flight PPI handoffs recomputed), the displaced
+        requests are requeued into ``pending`` for re-routing, its
+        finished requests are retired into fleet metrics, and only then
+        are its engines removed from the event loop — with every
+        allocator's ``check_invariants`` verified clean. Call between
+        ticks (posted events are always drained within a tick)."""
+        for ep in self.endpoints:
+            if ep.name == name:
+                break
+        else:
+            raise KeyError(f"unknown endpoint {name!r}; have "
+                           f"{[e.name for e in self.endpoints]}")
+        self._draining.add(name)
+        try:
+            displaced = ep.drain()
+            if displaced and pending is None:
+                raise RuntimeError(
+                    f"endpoint {name!r} holds {len(displaced)} unfinished "
+                    "request(s) but no pending queue was given to requeue "
+                    "them into")
+            if pending is not None:
+                # stable re-insertion keeps pending sorted by arrival (the
+                # dispatch discipline run()'s up-front sort establishes);
+                # displaced arrivals are in the past, so they re-route
+                # ahead of future traffic
+                for r in sorted(displaced, key=lambda r: r.arrival):
+                    i = len(pending)
+                    while i > 0 and pending[i - 1].arrival > r.arrival:
+                        i -= 1
+                    pending.insert(i, r)
+            self.retired.extend(ep.finished())
+            for eng in ep.engines:
+                assert not eng.queue and all(s is None for s in eng.slots), \
+                    f"drain left work on engine {eng.name!r}"
+                eng.allocator.check_invariants()
+            self.endpoints.remove(ep)
+            self.engines = [e for ep_ in self.endpoints
+                            for e in ep_.engines]
+            self.router.on_membership_change(self.endpoints)
+        finally:
+            self._draining.discard(name)
+        return ep
+
+    # ------------------------------------------------------------------
     def n_finished(self) -> int:
-        return sum(ep.n_finished() for ep in self.endpoints)
+        return sum(ep.n_finished() for ep in self.endpoints) \
+            + len(self.retired)
 
     def _dispatch(self, pending: deque):
         """Route pending arrivals in head-of-line order (the discipline of
         the per-system loops this replaced). Routers that defer the head
         for placement reasons of their own (session stickiness) may opt
         into a bounded ``lookahead`` window so one pinned request doesn't
-        convoy the unrelated traffic queued behind it."""
+        convoy the unrelated traffic queued behind it. Endpoints mid-drain
+        (``detach_endpoint``) are withheld from the router entirely."""
+        endpoints = self.endpoints
+        if self._draining:
+            endpoints = [ep for ep in endpoints
+                         if ep.name not in self._draining]
+            if not endpoints:
+                return
         while pending:
-            ep = self.router.select(pending[0], self.endpoints)
+            ep = self.router.select(pending[0], endpoints)
             if ep is not None:
                 ep.submit(pending.popleft(), self)
                 continue
@@ -201,7 +306,7 @@ class ClusterRuntime:
                     continue
                 if i > window:
                     break
-                ep = self.router.select(req, self.endpoints)
+                ep = self.router.select(req, endpoints)
                 if ep is not None:
                     placed_at = i
                     break
@@ -237,8 +342,12 @@ class ClusterRuntime:
                  if (t := e.next_ready_time()) is not None]
         if pending:
             nexts.append(pending[0].arrival)
+        # a candidate no clock sits below advances nothing: a past-arrival
+        # pending head that dispatch just refused (admission caps — e.g.
+        # work displaced by a detach) must not pin the jump to a no-op
+        nexts = [t for t in nexts if any(t > e.clock for e in self.engines)]
         if not nexts:
-            return False   # deadlock guard (shouldn't happen)
+            return False   # nothing can advance: honest stall
         t = min(nexts)
         for e in self.engines:
             e.clock = max(e.clock, t)
@@ -282,7 +391,8 @@ class ClusterRuntime:
             if not self.tick(pending):
                 break
         return aggregate([r.metrics for ep in self.endpoints
-                          for r in ep.finished()])
+                          for r in ep.finished()]
+                         + [r.metrics for r in self.retired])
 
 
 def check_requests_fresh(requests: Sequence[Request]) -> None:

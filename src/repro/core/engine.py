@@ -48,6 +48,11 @@ class EngineConfig:
 
 
 class Engine:
+    # trailing window (simulated seconds) over which busy_fraction() is
+    # measured — the utilization signal the autoscaler's scale-down
+    # hysteresis reads. Class attribute so tests can tighten it.
+    BUSY_WINDOW = 20.0
+
     def __init__(self, name: str, cfg, engine_cfg: EngineConfig, device_model,
                  executor):
         self.name = name
@@ -65,6 +70,15 @@ class Engine:
         self.finished: List[Request] = []
         self.completed_prefills: List = []   # (time, req) from prefill-only role
         self.n_preemptions = 0               # recompute preemptions served
+        # busy-time accounting for the autoscaler's utilization signal:
+        # every executed iteration appends (end_clock, duration) here; the
+        # log is pruned to BUSY_WINDOW seconds so busy_fraction() stays O(1)
+        # amortised. busy_since marks when this engine joined the cluster
+        # (reset by InferenceService.attach_endpoint), so a freshly
+        # attached engine's fraction is over its own lifetime, not the
+        # cluster's. Pure bookkeeping: never feeds metrics or scheduling.
+        self.busy_since = 0.0
+        self._work_log: Deque = deque()      # (end_clock, duration)
         # per-token emission hook for streaming consumers (InferenceService):
         # called as on_token(request, token_id, clock) at the moment each
         # output token's timestamp is recorded. None = no overhead.
@@ -73,6 +87,33 @@ class Engine:
     def _emit(self, req: Request, token: int):
         if self.on_token is not None:
             self.on_token(req, token, self.clock)
+
+    # ------------------------------------------------------------------
+    # busy-time accounting (autoscaler utilization signal)
+    # ------------------------------------------------------------------
+    def _record_work(self, duration: float):
+        if duration <= 0.0:
+            return
+        self._work_log.append((self.clock, duration))
+        horizon = self.clock - self.BUSY_WINDOW
+        while self._work_log and self._work_log[0][0] < horizon:
+            self._work_log.popleft()
+
+    def busy_fraction(self, window: Optional[float] = None) -> float:
+        """Fraction of the trailing ``window`` simulated seconds this
+        engine spent executing iterations (1.0 = saturated). The window
+        is clipped to the engine's own lifetime (``busy_since``) so a
+        freshly attached engine isn't reported idle for time it did not
+        exist."""
+        window = self.BUSY_WINDOW if window is None else window
+        lo = max(self.clock - window, self.busy_since)
+        span = self.clock - lo
+        if span <= 0.0:
+            return 0.0
+        busy = sum(min(end, self.clock) - max(end - dur, lo)
+                   for end, dur in self._work_log
+                   if end > lo)
+        return min(busy / span, 1.0)
 
     # ------------------------------------------------------------------
     # admission
@@ -288,6 +329,7 @@ class Engine:
                     self._emit(r, r.generated[-1])
                     r.metrics.finish_time = self.clock
                     self._finish(r)
+            self._record_work(transfer_time)
             return transfer_time
 
         # --- execute prefill chunks (possibly several requests) -----------
@@ -326,6 +368,7 @@ class Engine:
             prefill_tokens, prefill_ctx, decode_ctx_sum, len(decode_reqs))
         duration = max(duration, transfer_time)
         self.clock += duration
+        self._record_work(duration)
         for r in ttft_at_ingest:
             r.metrics.first_token_time = self.clock
             self._emit(r, r.generated[-1])
@@ -400,24 +443,61 @@ class Engine:
         req.slot = None
         self.finished.append(req)
 
+    def remove_request(self, req_id: str) -> Optional[Request]:
+        """Pull a queued or resident request out of this engine: release
+        its slot and KV blocks without touching its metrics or terminal
+        state (the caller decides whether this is a cancellation or a
+        migration). Returns the request, or None if this engine does not
+        hold it. Call between iterations only (plans hold no state across
+        ``step()`` calls)."""
+        for i, r in enumerate(self.queue):
+            if r.req_id == req_id:
+                del self.queue[i]
+                self.allocator.free(req_id)    # no-op when nothing is owned
+                return r
+        for r in self.slots:
+            if r is not None and r.req_id == req_id:
+                self.allocator.free(req_id)
+                self.executor.reset_slot(r.slot)
+                self.slots[r.slot] = None
+                r.slot = None
+                return r
+        return None
+
     def cancel(self, req_id: str) -> Optional[Request]:
         """Abort a queued or resident request mid-flight: release its slot
         and KV blocks (nothing is registered in the prefix cache — the
         sequence never completed) and record the ``cancelled`` terminal
         state in its metrics. Returns the request, or None if this engine
-        does not hold it. Call between iterations only (plans hold no
-        state across ``step()`` calls)."""
-        for i, r in enumerate(self.queue):
-            if r.req_id == req_id:
-                del self.queue[i]
-                return self._cancel(r)
-        for r in self.slots:
-            if r is not None and r.req_id == req_id:
-                self.executor.reset_slot(r.slot)
-                self.slots[r.slot] = None
-                r.slot = None
-                return self._cancel(r)
-        return None
+        does not hold it."""
+        r = self.remove_request(req_id)
+        return self._cancel(r) if r is not None else None
+
+    def drain_requests(self) -> List[Request]:
+        """Evict everything this engine holds for recompute elsewhere
+        (endpoint detach): residents leave via the preemption-by-recompute
+        path (generated tokens folded into the prompt, KV freed), then the
+        whole queue — including requests the preemptions just requeued —
+        is popped and stripped of engine-local state (payloads, partial
+        prefills, first tokens) because the KV they reference lives on the
+        hardware being removed. Returns the displaced requests; afterwards
+        the engine holds no work and its allocator invariants are clean."""
+        for r in list(self.slots):
+            if r is not None:
+                self._preempt(r)
+        displaced = []
+        while self.queue:
+            r = self.queue.popleft()
+            r.kv_payload = None
+            r.local_payload = False
+            r.first_token = None
+            r.partial_len = 0
+            r.context_len = 0
+            r.state = ReqState.WAITING
+            r.ready_time = r.arrival
+            self.allocator.free(r.req_id)      # no-op when nothing is owned
+            displaced.append(r)
+        return displaced
 
     def _cancel(self, req: Request) -> Request:
         self.allocator.free(req.req_id)    # no-op when nothing is owned

@@ -29,6 +29,12 @@ Examples:
   PYTHONPATH=src python -m repro.launch.serve --approach cronus \
       --arrival poisson:6 --n-requests 1000
 
+  # elastic autoscaling under a diurnal ramp: start with one pair, let
+  # the SLO-driven autoscaler attach/detach from a 1xA100 + 4xA10 rack:
+  PYTHONPATH=src python -m repro.launch.serve --approach cronus \
+      --arrival ramp:2:8:120 --n-requests 600 \
+      --autoscale "slo:goodput>=0.9:cooldown=10" --inventory "A100:1,A10:4"
+
   # stream the first request's tokens, cancel it after 32:
   PYTHONPATH=src python -m repro.launch.serve --approach cronus \
       --n-requests 50 --stream --cancel-after 32
@@ -134,6 +140,14 @@ def main():
         spec = spec.replace(s_kv=int(
             max(r.input_len + r.output_len for r in reqs) + 8))
 
+    if spec.autoscale is not None and spec.arrival is None:
+        # closed-loop replay submits the whole trace up-front, so the
+        # autoscaler would see an epoch of queueing at t=0 and scale to
+        # the rack limit immediately — not a load signal, an artifact
+        raise SystemExit("bad workload: --autoscale reacts to live load; "
+                         "drive it open-loop with --arrival "
+                         "(e.g. --arrival ramp:2:8)")
+
     if spec.arrival is not None:
         # open-loop: live submission at each wall-time offset — the demo
         # flags follow a single handle through a pre-submitted batch, which
@@ -145,6 +159,9 @@ def main():
         driver = OpenLoopDriver(spec.build())
         driver.run(reqs)
         metrics = driver.metrics()
+        scaler = driver.service.autoscaler
+        if scaler is not None:
+            metrics["autoscale"] = scaler.report(driver.service.now)
     else:
         service = spec.build()
         handles = [service.submit(r) for r in reqs]

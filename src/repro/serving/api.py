@@ -99,6 +99,11 @@ class ServeSpec:
     # "fixed:I" | "poisson:RATE" | "burst:RATE[:B[:ON]]" | "ramp:LO:HI[:P]".
     # None = closed-loop trace replay (the historical behaviour).
     arrival: Optional[str] = None
+    # elastic autoscaling (repro.autoscale): policy spec string such as
+    # "slo:goodput>=0.9:cooldown=5", plus the idle-device inventory the
+    # autoscaler may attach ("A100:1,A10:4"). None = fixed fleet.
+    autoscale: Optional[str] = None
+    inventory: Optional[str] = None
 
     def __post_init__(self):
         self.validate()
@@ -154,6 +159,27 @@ class ServeSpec:
             raise ValueError("s_kv must be >= 1")
         if self.arrival is not None:
             parse_arrival(self.arrival)   # raises ValueError on bad specs
+        if self.autoscale is not None:
+            from repro.autoscale import DeviceInventory, parse_autoscale
+            parse_autoscale(self.autoscale)  # raises ValueError on bad specs
+            if self.executor == "real":
+                raise ValueError(
+                    "autoscale builds new endpoints on the fly; the "
+                    "RealExecutor's compiled model state cannot be "
+                    "provisioned mid-run, so autoscaling is "
+                    "simulation-only")
+            if (self.inventory is None
+                    or DeviceInventory.parse(self.inventory).total == 0):
+                raise ValueError(
+                    "autoscale needs a non-empty device inventory to "
+                    "scale into — with a fixed endpoint set and an empty "
+                    "rack there is nothing to attach "
+                    "(set inventory='A100:1,A10:4'-style)")
+        elif self.inventory is not None:
+            raise ValueError(
+                "inventory without autoscale does nothing — idle devices "
+                "are only consumed by the autoscaler (set autoscale, "
+                "e.g. 'slo:goodput>=0.9')")
 
     # ------------------------------------------------------------------
     # serialization (JSON round-trip)
@@ -236,6 +262,15 @@ class ServeSpec:
                             "poisson:RATE | burst:RATE[:BURSTINESS"
                             "[:MEAN_ON]] | ramp:LO:HI[:PERIOD] "
                             "(default: closed-loop replay at --interval)")
+        g.add_argument("--autoscale", default=cls._default("autoscale"),
+                       metavar="POLICY",
+                       help="elastic autoscaling policy, e.g. "
+                            "'slo:goodput>=0.9:cooldown=5' "
+                            "(default: fixed fleet; needs --inventory)")
+        g.add_argument("--inventory", default=cls._default("inventory"),
+                       metavar="DEVICES",
+                       help="idle devices the autoscaler may attach, "
+                            "e.g. 'A100:1,A10:4'")
 
     @classmethod
     def from_cli(cls, args) -> "ServeSpec":
@@ -252,7 +287,8 @@ class ServeSpec:
                    max_slots=max_slots, block_size=block_size,
                    max_batched_tokens=args.max_batched_tokens,
                    s_kv=args.s_kv, chunk_pad=args.chunk_pad,
-                   arrival=args.arrival)
+                   arrival=args.arrival, autoscale=args.autoscale,
+                   inventory=args.inventory)
 
     @classmethod
     def _default(cls, field: str):
@@ -279,17 +315,33 @@ class ServeSpec:
                 max_batched_tokens=self.max_batched_tokens,
                 sched_policy=self.sched_policy,
                 prefix_cache=self.prefix_cache)
-            return InferenceService(system.endpoints, system.router,
-                                    spec=self, cfg=cfg, system=system)
-        system = build_system(
-            self.approach, cfg, DEVICES[self.hi], DEVICES[self.lo],
+            service = InferenceService(system.endpoints, system.router,
+                                       spec=self, cfg=cfg, system=system)
+        else:
+            system = build_system(
+                self.approach, cfg, DEVICES[self.hi], DEVICES[self.lo],
+                executor_factory=factory, max_slots=self.max_slots,
+                block_size=self.block_size,
+                max_batched_tokens=self.max_batched_tokens,
+                sched_policy=self.sched_policy,
+                prefix_cache=self.prefix_cache)
+            endpoints, router = self._pair_endpoints(system)
+            service = InferenceService(endpoints, router, spec=self,
+                                       cfg=cfg, system=system)
+        # how the autoscaler builds scale-up endpoints that match the
+        # fleet's engine-level policies
+        service.build_kw = dict(
             executor_factory=factory, max_slots=self.max_slots,
             block_size=self.block_size,
             max_batched_tokens=self.max_batched_tokens,
             sched_policy=self.sched_policy, prefix_cache=self.prefix_cache)
-        endpoints, router = self._pair_endpoints(system)
-        return InferenceService(endpoints, router, spec=self, cfg=cfg,
-                                system=system)
+        if self.autoscale is not None:
+            from repro.autoscale import (Autoscaler, DeviceInventory,
+                                         parse_autoscale)
+            service.attach_autoscaler(Autoscaler(
+                DeviceInventory.parse(self.inventory),
+                policy=parse_autoscale(self.autoscale)))
+        return service
 
     def _pair_endpoints(self, system) -> Tuple[List[Endpoint], Router]:
         """Endpoint + router wiring for the five single-pair approaches —
@@ -439,6 +491,8 @@ class InferenceService:
         self._pending: Deque[Request] = deque()
         self._handles: Dict[str, RequestHandle] = {}
         self._n_cancelled = 0
+        self._autoscaler = None
+        self.build_kw: Dict = {}      # scale-up endpoint construction kwargs
         for eng in self.runtime.engines:
             eng.on_token = self._on_token
 
@@ -483,6 +537,41 @@ class InferenceService:
         """Submitted requests still owed a completion."""
         return self.n_submitted - self._n_cancelled - self.n_finished
 
+    @property
+    def autoscaler(self):
+        return self._autoscaler
+
+    def oldest_pending_arrival(self) -> Optional[float]:
+        """Arrival time of the oldest not-yet-routed submission (the
+        autoscaler's view of queueing that never reached an endpoint)."""
+        return self._pending[0].arrival if self._pending else None
+
+    # ------------------------------------------------------------------
+    # elastic membership (autoscaling surface)
+    # ------------------------------------------------------------------
+    def attach_endpoint(self, ep: Endpoint, now: Optional[float] = None
+                        ) -> None:
+        """Add a live endpoint mid-run (see
+        :meth:`ClusterRuntime.attach_endpoint`) and wire its engines into
+        this service's token-emission stream."""
+        self.runtime.attach_endpoint(ep, now=now)
+        for eng in ep.engines:
+            eng.on_token = self._on_token
+
+    def detach_endpoint(self, name: str) -> Endpoint:
+        """Remove a live endpoint: drains its residents by recompute back
+        into this service's pending queue (no request is lost; each will
+        re-route on a later tick) and folds its finished requests into
+        the fleet's metrics via ``runtime.retired``."""
+        return self.runtime.detach_endpoint(name, pending=self._pending)
+
+    def attach_autoscaler(self, autoscaler) -> None:
+        """Hand the scaling loop this service: ``autoscaler.on_tick`` runs
+        after every ``step``. With no autoscaler attached the service
+        behaves bit-identically to a fixed fleet."""
+        self._autoscaler = autoscaler
+        autoscaler.bind(self)
+
     # ------------------------------------------------------------------
     # the online surface
     # ------------------------------------------------------------------
@@ -522,7 +611,13 @@ class InferenceService:
 
     def step(self) -> bool:
         """One event-loop round; False when no progress is possible."""
-        return self.runtime.tick(self._pending)
+        progressed = self.runtime.tick(self._pending)
+        if self._autoscaler is not None:
+            # a scaling action counts as progress: a stalled cluster that
+            # just attached capacity has new work to do next round
+            acted = self._autoscaler.on_tick(self)
+            return progressed or acted is not None
+        return progressed
 
     def step_until(self, t: float, max_steps: int = 10_000_000, *,
                    strict: bool = False) -> float:
@@ -570,6 +665,7 @@ class InferenceService:
         queueing/service split of TTFT."""
         ms = [r.metrics for ep in self.runtime.endpoints
               for r in ep.finished()]
+        ms += [r.metrics for r in self.runtime.retired]
         ms += [h.request.metrics for h in self._handles.values()
                if h.request.metrics.cancelled]
         return aggregate(ms, ttft_slo, tbt_slo, queueing=queueing)

@@ -1,0 +1,409 @@
+"""Elastic autoscaling: live attach/detach with drain-by-recompute,
+router hygiene under membership change, EndpointStats window signals,
+policy/inventory spec round-trips, the SLO-driven scaling loop, and the
+inertness contract (no autoscaler => nothing changes)."""
+import argparse
+import json
+
+import pytest
+
+from repro.autoscale import (Autoscaler, DeviceInventory, DeviceLedger,
+                             EndpointTemplate, UNIT_COST, build_endpoint,
+                             default_templates, endpoint_devices,
+                             parse_autoscale)
+from repro.cluster import build_cluster
+from repro.cluster.router import (PrefixAffinityRouter, RoundRobinRouter,
+                                  SessionAffinityRouter)
+from repro.configs import get_config
+from repro.serving.api import ServeSpec
+from repro.serving.trace import make_trace
+from repro.workloads import OpenLoopDriver
+
+CFG = get_config("llama3-8b")
+
+# the closed-loop aggregate's exact key set since the seed — feature keys
+# (cancelled / goodput / queueing_*) appear only when their feature is
+# used, and autoscaling must not add any
+SEED_KEYS = {"throughput", "ttft_p50", "ttft_p99", "tbt_p50", "tbt_p99",
+             "completed", "makespan"}
+
+
+def _check_clean(service):
+    for ep in service.endpoints:
+        for eng in ep.engines:
+            eng.allocator.check_invariants()
+
+
+def _terminal_ids(service):
+    return ([r.req_id for ep in service.endpoints for r in ep.finished()]
+            + [r.req_id for r in service.runtime.retired])
+
+
+# ---------------------------------------------------------------------------
+# live membership: detach drains by recompute, attach joins mid-run
+# ---------------------------------------------------------------------------
+
+def test_detach_mid_decode_loses_no_request():
+    service = ServeSpec(cluster="2xworker:A10").build()
+    reqs = make_trace(40, seed=0, interval=0.05)
+    for r in reqs:
+        service.submit(r)
+    service.step_until(2.0)          # decodes underway on both workers
+    victim = max(service.endpoints, key=lambda ep: ep.stats().queue_depth)
+    assert any(r is not None for e in victim.engines for r in e.slots)
+    service.detach_endpoint(victim.name)
+    assert victim.name not in [ep.name for ep in service.endpoints]
+    _check_clean(service)
+    m = service.drain()
+    assert m["completed"] == 40
+    ids = _terminal_ids(service)
+    assert len(ids) == len(set(ids)) == 40   # nothing lost, nothing doubled
+
+
+def test_detach_mid_ppi_prefill_recomputes_handoffs():
+    service = ServeSpec(cluster="cronus:A100+A10,worker:A10").build()
+    reqs = make_trace(30, seed=3, interval=0.02)
+    for r in reqs:
+        service.submit(r)
+    pair = service.endpoints[0]
+    for _ in range(4):
+        service.step()
+    assert pair._in_ppi, "test needs an in-flight PPI handoff"
+    service.detach_endpoint(pair.name)
+    assert not pair._in_ppi and not pair._offloaded
+    _check_clean(service)
+    m = service.drain()
+    assert m["completed"] == 30
+    ids = _terminal_ids(service)
+    assert len(ids) == len(set(ids)) == 30
+    # displaced requests recompute from the full prompt: TTFT still sane
+    for ep in service.endpoints:
+        for r in ep.finished():
+            assert r.metrics.first_token_time >= r.arrival
+
+
+def test_detach_with_queued_requests_requeues_in_arrival_order():
+    service = ServeSpec(cluster="2xworker:A10").build()
+    reqs = make_trace(24, seed=1, interval=0.01)
+    for r in reqs:
+        service.submit(r)
+    service.step()                   # dispatch; queues now hold most work
+    victim = max(service.endpoints, key=lambda ep: ep.stats().queue_depth)
+    assert any(e.queue for e in victim.engines)
+    service.detach_endpoint(victim.name)
+    arrivals = [r.arrival for r in service._pending]
+    assert arrivals == sorted(arrivals)
+    m = service.drain()
+    assert m["completed"] == 24
+
+
+def test_detach_finished_endpoint_counts_metrics_once():
+    service = ServeSpec(cluster="2xworker:A10").build()
+    reqs = make_trace(20, seed=4, interval=0.1)
+    m_before = service.run(reqs)
+    assert m_before["completed"] == 20
+    kept = service.detach_endpoint(service.endpoints[0].name)
+    assert kept.n_finished() == len(
+        [r for r in service.runtime.retired])  # moved, not copied
+    m_after = service.metrics()
+    assert m_after == m_before        # bit-identical despite the detach
+
+
+def test_runtime_detach_guards():
+    service = ServeSpec(cluster="2xworker:A10").build()
+    with pytest.raises(KeyError):
+        service.runtime.detach_endpoint("no-such-endpoint")
+    reqs = make_trace(8, seed=0, interval=0.0)
+    for r in reqs:
+        service.submit(r)
+    service.step()
+    busy = max(service.endpoints, key=lambda ep: ep.stats().queue_depth)
+    with pytest.raises(RuntimeError, match="pending"):
+        service.runtime.detach_endpoint(busy.name, pending=None)
+    service.drain()
+
+
+def test_attach_syncs_clocks_and_serves():
+    service = ServeSpec(cluster="worker:A10").build()
+    reqs = make_trace(24, seed=2, interval=0.05)
+    for r in reqs:
+        service.submit(r)
+    service.step_until(1.0)
+    now = service.now
+    assert now > 0.0
+    late = build_endpoint(CFG, "worker:A10", "late-worker",
+                          **service.build_kw)
+    service.attach_endpoint(late)
+    assert all(e.clock >= now for e in late.engines)  # no time travel
+    with pytest.raises(ValueError, match="duplicate"):
+        service.attach_endpoint(
+            build_endpoint(CFG, "worker:A10", "late-worker",
+                           **service.build_kw))
+    m = service.drain()
+    assert m["completed"] == 24
+    assert late.n_finished() > 0     # the joiner actually took load
+
+
+# ---------------------------------------------------------------------------
+# router hygiene under membership change
+# ---------------------------------------------------------------------------
+
+def _workers(n):
+    return list(build_cluster(CFG, f"{n}xworker:A10").endpoints)
+
+
+def test_round_robin_survives_membership_change():
+    eps = _workers(2)
+    rr = RoundRobinRouter(weights=[3, 1])
+    req = make_trace(1, seed=0)[0]
+    assert rr.select(req, eps) is not None
+    eps3 = _workers(3)
+    rr.on_membership_change(eps3)
+    assert rr.weights is None        # fleet-size weights cannot remap
+    picked = {rr.select(make_trace(1, seed=i)[0], eps3).name
+              for i in range(6)}
+    assert picked == {ep.name for ep in eps3}   # uniform rotation
+
+
+def test_session_affinity_rehomes_after_detach():
+    eps = _workers(2)
+    router = SessionAffinityRouter()
+    reqs = make_trace(4, seed=0, sessions=1)    # one shared session
+    home = router.select(reqs[0], eps)
+    assert router._table[reqs[0].session] is home
+    survivors = [ep for ep in eps if ep is not home]
+    router.on_membership_change(survivors)
+    assert reqs[0].session not in router._table
+    rehomed = router.select(reqs[1], survivors)
+    assert rehomed is survivors[0]   # re-pinned through the fallback
+
+
+def test_prefix_affinity_history_keyed_by_name_and_pruned():
+    eps = _workers(2)
+    router = PrefixAffinityRouter()
+    req = make_trace(1, seed=7)[0]
+    first = router.select(req, eps)
+    assert first.name in router._history
+    survivors = [ep for ep in eps if ep is not first]
+    router.on_membership_change(survivors)
+    assert first.name not in router._history    # its KV left with it
+    # a re-attached endpoint under the same name starts cold
+    fresh = _workers(2)[0]
+    fresh.name = first.name
+    roster = survivors + [fresh]
+    bs = fresh.engines[-1].ecfg.block_size
+    hashes = router._prompt_hashes(req, bs)
+    assert router._history_match(fresh.name, hashes, bs) == 0
+    assert router.select(make_trace(1, seed=8)[0], roster) is not None
+
+
+# ---------------------------------------------------------------------------
+# EndpointStats window signals
+# ---------------------------------------------------------------------------
+
+def test_busy_fraction_and_oldest_queued_age():
+    service = ServeSpec(cluster="worker:A10", max_slots=4).build()
+    ep = service.endpoints[0]
+    s0 = ep.stats()
+    assert s0.busy_frac == 0.0 and s0.oldest_queued_age == 0.0
+    for r in make_trace(12, seed=0, interval=0.0):
+        service.submit(r)
+    for _ in range(6):
+        service.step()
+    s = ep.stats()
+    assert 0.0 < s.busy_frac <= 1.0
+    assert s.oldest_queued_age > 0.0         # backlog aging behind slots
+    service.drain()
+    assert ep.stats().oldest_queued_age == 0.0   # queues empty again
+
+
+def test_metrics_keys_unchanged_without_autoscaler():
+    """The inertness contract: a fixed-fleet service exposes exactly the
+    seed's aggregate keys — autoscaling machinery must add nothing."""
+    service = ServeSpec(approach="cronus").build()
+    assert service.autoscaler is None
+    m = service.run(make_trace(15, seed=1, interval=0.1))
+    assert set(m) == SEED_KEYS
+
+
+# ---------------------------------------------------------------------------
+# inventory / templates / ledger
+# ---------------------------------------------------------------------------
+
+def test_inventory_parse_take_put_roundtrip():
+    inv = DeviceInventory.parse("A100:1,A10:4")
+    assert inv.total == 5 and inv.spec == "A10:4,A100:1"
+    assert DeviceInventory.parse(inv.spec).counts == inv.counts
+    assert inv.can_build(("A100", "A10"))
+    inv.take(("A100", "A10"))
+    assert not inv.can_build(("A100",)) and inv.counts == {"A10": 3}
+    with pytest.raises(ValueError, match="cannot supply"):
+        inv.take(("A100",))
+    inv.put(("A100",))
+    assert inv.can_build(("A100",))
+    for bad in ("A100", "H100:2", "A10:x"):
+        with pytest.raises(ValueError):
+            DeviceInventory.parse(bad)
+
+
+def test_templates_devices_costs_and_defaults():
+    t = EndpointTemplate("cronus:A100+A10", capacity_qps=5.7)
+    assert t.kind == "cronus" and t.devices == ("A100", "A10")
+    assert t.cost_rate == pytest.approx(UNIT_COST["A100"] + UNIT_COST["A10"])
+    with pytest.raises(ValueError, match="one node"):
+        EndpointTemplate("2xworker:A10", capacity_qps=1.0)
+    with pytest.raises(ValueError, match="capacity_qps"):
+        EndpointTemplate("worker:A10", capacity_qps=0.0)
+    nodes = {t.node for t in
+             default_templates(DeviceInventory.parse("A100:1,A10:2"))}
+    assert nodes == {"worker:A100", "worker:A10", "cronus:A100+A10"}
+    # measured capacities override the FLOPS prior
+    (tpl,) = [t for t in default_templates(
+        DeviceInventory.parse("A10:1"),
+        capacity_qps={"worker:A10": 2.5}) if t.node == "worker:A10"]
+    assert tpl.capacity_qps == 2.5
+
+
+def test_ledger_prices_open_and_closed_leases():
+    led = DeviceLedger()
+    led.open("a", ("A100", "A10"), 0.0)
+    led.open("b", ("A10",), 5.0)
+    led.close("b", 15.0)
+    secs = led.device_seconds(20.0)
+    assert secs["A100"] == pytest.approx(20.0)
+    assert secs["A10"] == pytest.approx(30.0)     # 20 open + 10 closed
+    assert led.device_cost(20.0) == pytest.approx(
+        20.0 * UNIT_COST["A100"] + 30.0 * UNIT_COST["A10"])
+    with pytest.raises(ValueError, match="open lease"):
+        led.open("a", ("A10",), 1.0)
+
+
+def test_endpoint_devices_reads_pair_and_pipeline():
+    pair = build_cluster(CFG, "cronus:A100+A10").endpoints[0]
+    assert sorted(endpoint_devices(pair)) == ["A10", "A100"]
+    pp = ServeSpec(approach="pp").build().endpoints[0]
+    assert sorted(endpoint_devices(pp)) == ["A10", "A100"]
+
+
+# ---------------------------------------------------------------------------
+# policy spec round-trip + ServeSpec integration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "slo",
+    "slo:goodput>=0.85",
+    "slo:goodput>=0.9:cooldown=5",
+    "slo:cooldown=2:window=6:up_age=1.5:down_busy=0.2:min=2",
+    "slo:eval=0.5:spinup=3:ttft=4:tbt=0.1:down_headroom=0.7",
+])
+def test_policy_spec_roundtrip(spec):
+    p = parse_autoscale(spec)
+    assert parse_autoscale(p.spec) == p
+
+
+@pytest.mark.parametrize("bad,msg", [
+    ("schedule:9to5", "unknown autoscale policy kind"),
+    ("slo:warp=9", "bad autoscale clause"),
+    ("slo:cooldown", "bad autoscale clause"),
+    ("slo:cooldown=fast", "bad number"),
+    ("slo:goodput>=0", "goodput target"),
+    ("slo:min=0", "min_endpoints"),
+    ("slo:down_busy=1.0", "down_busy"),
+    ("slo:cooldown=1:cooldown=2", "duplicate"),
+    ("slo:", "empty clause"),
+])
+def test_policy_spec_rejects(bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_autoscale(bad)
+
+
+def test_serve_spec_autoscale_roundtrips_and_refusals():
+    spec = ServeSpec(approach="cronus", arrival="ramp:1:8:120",
+                     autoscale="slo:goodput>=0.9:cooldown=5",
+                     inventory="A100:1,A10:4")
+    assert ServeSpec.from_dict(json.loads(json.dumps(spec.to_dict()))) == spec
+    ap = argparse.ArgumentParser()
+    ServeSpec.add_cli_args(ap)
+    cli = ServeSpec.from_cli(ap.parse_args(
+        ["--arrival", "ramp:1:8:120", "--autoscale",
+         "slo:goodput>=0.9:cooldown=5", "--inventory", "A100:1,A10:4"]))
+    assert cli == spec
+    with pytest.raises(ValueError, match="non-empty device inventory"):
+        ServeSpec(autoscale="slo")
+    with pytest.raises(ValueError, match="non-empty device inventory"):
+        ServeSpec(autoscale="slo", inventory="")
+    with pytest.raises(ValueError, match="inventory without autoscale"):
+        ServeSpec(inventory="A10:4")
+    with pytest.raises(ValueError, match="simulation-only"):
+        ServeSpec(autoscale="slo", inventory="A10:1", executor="real",
+                  s_kv=64)
+    with pytest.raises(ValueError, match="unknown autoscale"):
+        ServeSpec(autoscale="magic", inventory="A10:1")
+    with pytest.raises(ValueError, match="unknown device"):
+        ServeSpec(autoscale="slo", inventory="H100:8")
+
+
+# ---------------------------------------------------------------------------
+# the scaling loop end-to-end
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_scales_up_under_ramp_and_loses_nothing():
+    spec = ServeSpec(approach="cronus", arrival="ramp:1:8:120",
+                     autoscale="slo:goodput>=0.9:cooldown=10",
+                     inventory="A100:1,A10:4")
+    reqs = make_trace(300, seed=0, arrival=spec.arrival,
+                      vocab_size=CFG.vocab_size)
+    service = spec.build()
+    assert service.autoscaler is not None
+    driver = OpenLoopDriver(service)
+    driver.run(reqs)
+    m = driver.metrics(5.0, 0.20)
+    assert m["completed"] == 300
+    rep = service.autoscaler.report(service.now)
+    assert rep["n_scale_ups"] >= 1
+    assert rep["device_cost"] > 0.0
+    assert rep["final_endpoints"] == len(service.endpoints)
+    # every scale-up consumed real inventory and opened a lease
+    used = [e for e in rep["events"] if e["action"] == "scale_up"]
+    assert all(e["endpoint"].startswith("as") for e in used)
+    _check_clean(service)
+    ids = _terminal_ids(service)
+    assert len(ids) == len(set(ids)) == 300
+
+
+def test_autoscaler_scales_down_idle_capacity():
+    spec = ServeSpec(cluster="2xworker:A10", arrival="poisson:0.4",
+                     autoscale="slo:cooldown=2:down_busy=0.9:min=1",
+                     inventory="A10:1")
+    reqs = make_trace(40, seed=5, arrival=spec.arrival,
+                      vocab_size=CFG.vocab_size)
+    service = spec.build()
+    driver = OpenLoopDriver(service)
+    driver.run(reqs)
+    assert driver.metrics()["completed"] == 40
+    scaler = service.autoscaler
+    rep = scaler.report(service.now)
+    assert rep["n_scale_downs"] >= 1
+    assert len(service.endpoints) >= 1           # never below the floor
+    # the shed device went back on the rack, and its lease closed
+    assert scaler.inventory.counts["A10"] == 1 + rep["n_scale_downs"] - \
+        rep["n_scale_ups"]
+    secs = scaler.ledger.device_seconds(service.now)
+    assert secs["A10"] < 2 * service.now + 1e-9  # not billed past detach
+    ids = _terminal_ids(service)
+    assert len(ids) == len(set(ids)) == 40
+
+
+def test_autoscaler_respects_empty_inventory_and_cooldown():
+    inv = DeviceInventory.parse("A10:1")
+    pol = parse_autoscale("slo:cooldown=1000")
+    spec = ServeSpec(cluster="worker:A10", arrival="poisson:6")
+    service = spec.build()
+    scaler = Autoscaler(inv, policy=pol)
+    service.attach_autoscaler(scaler)
+    reqs = make_trace(80, seed=0, arrival="poisson:6",
+                      vocab_size=CFG.vocab_size)
+    OpenLoopDriver(service).run(reqs)
+    rep = scaler.report(service.now)
+    # one action fits in the budget; the cooldown blocks every follow-up
+    assert rep["n_scale_ups"] + rep["n_scale_downs"] <= 1
