@@ -4,6 +4,8 @@ one request's tokens as they are generated, and print QoE metrics.
 
   PYTHONPATH=src python examples/quickstart.py          # real JAX compute
   PYTHONPATH=src python examples/quickstart.py --null   # simulated (CI)
+  PYTHONPATH=src python examples/quickstart.py --executor paged
+                                        # real compute, block-pool KV
 """
 import argparse
 import sys
@@ -21,14 +23,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--null", action="store_true",
                     help="NullExecutor (no tensor compute; CI smoke)")
+    ap.add_argument("--executor", default=None,
+                    choices=("null", "real", "paged"),
+                    help="compute backend (overrides --null; 'paged' = "
+                         "real compute over block-pool KV)")
     args = ap.parse_args()
 
     # 1. the whole deployment as one declarative spec: a reduced
     #    llama3-8b-family model on an A100 (CPI) + A10 (PPI) Cronus pair,
     #    real JAX execution unless --null
+    executor = args.executor or ("null" if args.null else "real")
     spec = ServeSpec(arch="llama3-8b", smoke=True,
                      approach="cronus", hi="A100", lo="A10",
-                     executor="null" if args.null else "real",
+                     executor=executor,
                      max_slots=4, block_size=8, max_batched_tokens=32,
                      s_kv=256, chunk_pad=32)
     cfg = get_config(spec.arch, smoke=spec.smoke)

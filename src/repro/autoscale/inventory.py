@@ -201,7 +201,9 @@ def build_endpoint(cfg, node: str, name: str, *,
                    max_slots: int = 256, block_size: int = 16,
                    max_batched_tokens: int = 512,
                    sched_policy: str = "fcfs", prefix_cache: bool = False,
-                   worker_queue_cap: Optional[int] = 4):
+                   worker_queue_cap: Optional[int] = 4,
+                   num_kv_blocks: Optional[int] = None,
+                   executor: str = "null"):
     """Materialise one endpoint from a single-node topology-DSL string,
     under a caller-chosen unique ``name`` (the builder's positional
     ``kind0`` names would collide with the live cluster's)."""
@@ -210,7 +212,8 @@ def build_endpoint(cfg, node: str, name: str, *,
         cfg, node, executor_factory=executor_factory, max_slots=max_slots,
         block_size=block_size, max_batched_tokens=max_batched_tokens,
         sched_policy=sched_policy, prefix_cache=prefix_cache,
-        worker_queue_cap=worker_queue_cap)
+        worker_queue_cap=worker_queue_cap,
+        num_kv_blocks=num_kv_blocks, executor=executor)
     (ep,) = system.endpoints
     ep.name = name
     return ep

@@ -160,7 +160,9 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                   max_batched_tokens: int = 512,
                   worker_queue_cap: Optional[int] = 4,
                   sched_policy: str = "fcfs",
-                  prefix_cache: bool = False) -> ClusterSystem:
+                  prefix_cache: bool = False,
+                  num_kv_blocks: Optional[int] = None,
+                  executor: str = "null") -> ClusterSystem:
     """Materialise a :class:`ClusterSpec` into engines + endpoints.
 
     ``executor_factory(role)`` is called with ``"ppi"``/``"cpi"`` for pair
@@ -171,7 +173,10 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
     a node's ``@policy`` DSL suffix (``options["sched_policy"]``)
     overrides it per endpoint. ``prefix_cache`` likewise is the
     cluster-wide default for shared-prefix KV reuse, overridden per node
-    by the ``@cache`` suffix.
+    by the ``@cache`` suffix. ``num_kv_blocks`` overrides every engine's
+    device-HBM-derived KV pool size (required with ``executor="paged"``,
+    whose pool is materialized for real); ``executor`` names the compute
+    backend the factory builds so each EngineConfig records it.
     """
     # imported lazily: core.cronus/baselines import the cluster runtime
     from repro.core.balancer import Balancer
@@ -183,7 +188,12 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
         spec = parse_cluster_spec(spec)
     executor_factory = executor_factory or _null_factory
     kw = dict(executor_factory=executor_factory, max_slots=max_slots,
-              block_size=block_size, max_batched_tokens=max_batched_tokens)
+              block_size=block_size, max_batched_tokens=max_batched_tokens,
+              num_kv_blocks=num_kv_blocks, executor=executor)
+
+    def pool(device) -> int:
+        return (num_kv_blocks if num_kv_blocks is not None
+                else max(device.kv_block_budget(block_size), 64))
 
     endpoints: List[Endpoint] = []
     for node in spec.nodes:
@@ -217,9 +227,9 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                              EngineConfig(
                                  max_batched_tokens=max_batched_tokens,
                                  max_slots=max_slots, block_size=block_size,
-                                 num_kv_blocks=max(
-                                     device.kv_block_budget(block_size), 64),
-                                 sched_policy=policy, prefix_cache=cache),
+                                 num_kv_blocks=pool(device),
+                                 sched_policy=policy, prefix_cache=cache,
+                                 executor=executor),
                              device, executor_factory("pp"))
                 endpoints.append(WorkerEndpoint(name, eng, queue_cap=None))
             else:                                        # worker
@@ -229,9 +239,9 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                                  max_batched_tokens=node.options.get(
                                      "max_batched_tokens", max_batched_tokens),
                                  max_slots=max_slots, block_size=block_size,
-                                 num_kv_blocks=max(
-                                     dev.kv_block_budget(block_size), 64),
-                                 sched_policy=policy, prefix_cache=cache),
+                                 num_kv_blocks=pool(dev),
+                                 sched_policy=policy, prefix_cache=cache,
+                                 executor=executor),
                              dev, executor_factory("worker"))
                 endpoints.append(WorkerEndpoint(
                     name, eng,

@@ -6,7 +6,7 @@ pinned partial length, exactly as the paper's evaluation does).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 from repro.cluster.router import RoundRobinRouter
 from repro.cluster.runtime import ClusterRuntime, WorkerEndpoint
@@ -47,20 +47,26 @@ class DPSystem:
 def build_dp(cfg, hi_device: DeviceModel, lo_device: DeviceModel, *,
              executor_factory: Callable, max_slots: int = 64,
              block_size: int = 16, sched_policy: str = "fcfs",
-             prefix_cache: bool = False) -> DPSystem:
+             prefix_cache: bool = False,
+             num_kv_blocks: Optional[int] = None,
+             executor: str = "null") -> DPSystem:
     hi = Engine("dp-hi", cfg,
                 EngineConfig(max_batched_tokens=512, max_slots=max_slots,
                              block_size=block_size,
-                             num_kv_blocks=max(hi_device.kv_block_budget(block_size), 64),
+                             num_kv_blocks=(num_kv_blocks if num_kv_blocks
+                                            is not None else
+                                            max(hi_device.kv_block_budget(block_size), 64)),
                              sched_policy=sched_policy,
-                             prefix_cache=prefix_cache),
+                             prefix_cache=prefix_cache, executor=executor),
                 hi_device, executor_factory("hi"))
     lo = Engine("dp-lo", cfg,
                 EngineConfig(max_batched_tokens=256, max_slots=max_slots,
                              block_size=block_size,
-                             num_kv_blocks=max(lo_device.kv_block_budget(block_size), 64),
+                             num_kv_blocks=(num_kv_blocks if num_kv_blocks
+                                            is not None else
+                                            max(lo_device.kv_block_budget(block_size), 64)),
                              sched_policy=sched_policy,
-                             prefix_cache=prefix_cache),
+                             prefix_cache=prefix_cache, executor=executor),
                 lo_device, executor_factory("lo"))
     return DPSystem(engines=[hi, lo], weights=[3, 1], queue_caps=[3, 1])
 
@@ -143,13 +149,17 @@ class PPSystem:
 def build_pp(cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec, *,
              executor_factory: Callable, max_slots: int = 64,
              block_size: int = 16, sched_policy: str = "fcfs",
-             prefix_cache: bool = False) -> PPSystem:
+             prefix_cache: bool = False,
+             num_kv_blocks: Optional[int] = None,
+             executor: str = "null") -> PPSystem:
     device = PipelineDeviceModel(hi_spec, lo_spec, cfg)
     eng = Engine("pp", cfg,
                  EngineConfig(max_batched_tokens=512, max_slots=max_slots,
                               block_size=block_size,
-                              num_kv_blocks=max(device.kv_block_budget(block_size), 64),
+                              num_kv_blocks=(num_kv_blocks if num_kv_blocks
+                                             is not None else
+                                             max(device.kv_block_budget(block_size), 64)),
                               sched_policy=sched_policy,
-                              prefix_cache=prefix_cache),
+                              prefix_cache=prefix_cache, executor=executor),
                  device, executor_factory("pp"))
     return PPSystem(engine=eng)

@@ -98,7 +98,9 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
                  decode_only_cpi: bool = False,
                  decode_offload: bool = False,
                  sched_policy: str = "fcfs",
-                 prefix_cache: bool = False) -> CronusSystem:
+                 prefix_cache: bool = False,
+                 num_kv_blocks: Optional[int] = None,
+                 executor: str = "null") -> CronusSystem:
     """executor_factory(role: str) -> executor ('ppi' | 'cpi').
 
     ``sched_policy`` selects the iteration-level batch-composition policy
@@ -106,16 +108,21 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
     default ``fcfs`` reproduces the seed engine bit-for-bit.
     ``prefix_cache`` enables shared-prefix KV reuse on both engines: a
     hit on the PPI shortens its split-prefill portion, a hit on the CPI
-    shortens the chunked remainder."""
-    ppi_blocks = max(ppi_device.kv_block_budget(block_size), 64)
-    cpi_blocks = max(cpi_device.kv_block_budget(block_size), 64)
+    shortens the chunked remainder. ``num_kv_blocks`` overrides the
+    device-HBM-derived KV pool size on both engines — required for the
+    paged executor, which materializes the pool for real; ``executor``
+    records the compute backend in each EngineConfig."""
+    ppi_blocks = (num_kv_blocks if num_kv_blocks is not None
+                  else max(ppi_device.kv_block_budget(block_size), 64))
+    cpi_blocks = (num_kv_blocks if num_kv_blocks is not None
+                  else max(cpi_device.kv_block_budget(block_size), 64))
     ppi = Engine("ppi", cfg,
                  EngineConfig(max_batched_tokens=max_batched_tokens,
                               max_slots=max_slots if decode_offload else 2,
                               block_size=block_size,
                               num_kv_blocks=ppi_blocks, prefill_only=True,
                               sched_policy=sched_policy,
-                              prefix_cache=prefix_cache),
+                              prefix_cache=prefix_cache, executor=executor),
                  ppi_device, executor_factory("ppi"))
     cpi = Engine("cpi", cfg,
                  EngineConfig(max_batched_tokens=max_batched_tokens,
@@ -123,7 +130,7 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
                               num_kv_blocks=cpi_blocks,
                               decode_only=decode_only_cpi,
                               sched_policy=sched_policy,
-                              prefix_cache=prefix_cache),
+                              prefix_cache=prefix_cache, executor=executor),
                  cpi_device, executor_factory("cpi"))
     return CronusSystem(ppi=ppi, cpi=cpi,
                         balancer=balancer if balancer is not None

@@ -45,6 +45,7 @@ class EngineConfig:
     skip_ahead: Optional[bool] = None  # None -> policy default (fcfs: off)
     lazy_kv: Optional[bool] = None     # None -> policy default (fcfs: off)
     prefix_cache: bool = False         # shared-prefix KV reuse (off = seed)
+    executor: str = "null"             # compute backend: null | real | paged
 
 
 class Engine:
@@ -66,6 +67,11 @@ class Engine:
                                         prefix_cache=engine_cfg.prefix_cache)
         self.scheduler = make_scheduler(engine_cfg.sched_policy, engine_cfg)
         self.slots: List[Optional[Request]] = [None] * engine_cfg.max_slots
+        # Block-pool executors bind to the engine so attention can read
+        # the live block tables (and the allocator's CoW hook can clone
+        # pool rows). Slot/null executors have no such coupling.
+        if hasattr(executor, "attach_engine"):
+            executor.attach_engine(self)
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.completed_prefills: List = []   # (time, req) from prefill-only role

@@ -55,6 +55,13 @@ class BlockAllocator:
         self.prefix_cache = prefix_cache
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._owned: Dict[str, List[int]] = {}
+        # Physical-copy hook for executors that keep real KV behind these
+        # block ids (PagedRealExecutor). Called as ``on_cow(dst, src,
+        # n_tokens)`` when a copy-on-write block is taken so the backend
+        # can clone the first ``n_tokens`` rows of ``src`` into ``dst``.
+        # Simulation-only engines leave it None.
+        self.on_cow = None
+        self._shared: Dict[str, int] = {}         # req -> cache-shared tokens
         # --- prefix-cache state (all empty when prefix_cache is off) ----
         self._ref: Dict[int, int] = {}            # block -> live refcount
         self._lru: OrderedDict = OrderedDict()    # refcount-0 cached blocks
@@ -158,6 +165,7 @@ class BlockAllocator:
         the free list. Without ``cache_tokens`` (preemption, or caching
         off) nothing is registered."""
         blocks = self._owned.pop(req_id, [])
+        self._shared.pop(req_id, None)
         if not self.prefix_cache:
             self._free.extend(blocks)
             return
@@ -259,6 +267,8 @@ class BlockAllocator:
             spare = self.num_free - (1 if src in self._lru else 0)
             if spare >= 1:
                 cow = self._take_block(exclude=src)
+                if self.on_cow is not None:
+                    self.on_cow(cow, src, src_len)
                 self._ref[cow] = 1
                 table.append(cow)
                 n += src_len
@@ -268,7 +278,15 @@ class BlockAllocator:
         if n > 0:
             self.n_prefix_hits += 1
             self.n_tokens_reused += n
+            self._shared[req_id] = n
         return n
+
+    def shared_tokens(self, req_id: str) -> int:
+        """Tokens at the head of ``req_id``'s context that came from the
+        prefix cache via :meth:`share_blocks`. Block-pool executors must
+        not overwrite them on inject: the full-block share is immutable
+        shared storage, and the CoW tail was already cloned physically."""
+        return self._shared.get(req_id, 0)
 
     def block_table(self, req_id: str) -> List[int]:
         return list(self._owned.get(req_id, []))

@@ -136,7 +136,7 @@ def main():
 
     cfg = get_config(spec.arch, smoke=spec.smoke)
     reqs = _make_trace(args, spec, cfg.vocab_size)
-    if spec.executor == "real" and spec.s_kv is None:
+    if spec.executor in ("real", "paged") and spec.s_kv is None:
         spec = spec.replace(s_kv=int(
             max(r.input_len + r.output_len for r in reqs) + 8))
 

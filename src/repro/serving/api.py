@@ -55,7 +55,7 @@ from repro.serving.hardware import DEVICES
 from repro.serving.simulator import APPROACHES, build_system
 from repro.workloads.arrivals import parse_arrival
 
-EXECUTORS = ("null", "real")
+EXECUTORS = ("null", "real", "paged")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +78,10 @@ class ServeSpec:
     ``executor="real"`` runs real JAX compute (reduced configs only) and
     needs ``s_kv`` — the per-slot KV capacity in tokens, normally the max
     ``input_len + output_len`` of the workload plus headroom.
+    ``executor="paged"`` also runs real compute but stores KV in a block
+    pool indexed by the engine's block tables (paged attention), so
+    prefix caching / ``@cache`` work on real compute; its pool size is
+    ``num_kv_blocks`` (default ``max_slots * ceil(s_kv / block_size)``).
     """
 
     arch: str = "llama3-8b"
@@ -88,13 +92,14 @@ class ServeSpec:
     cluster: Optional[str] = None         # topology DSL; overrides approach
     router: Optional[str] = None          # None = approach-appropriate
     sched_policy: str = "fcfs"            # iteration-level batch policy
-    prefix_cache: bool = False            # shared-prefix KV reuse (sim only)
-    executor: str = "null"                # "null" (simulated) | "real" (JAX)
+    prefix_cache: bool = False            # shared-prefix KV reuse (null/paged)
+    executor: str = "null"                # "null" (sim) | "real" | "paged"
     max_slots: int = 256                  # resident-request limit per engine
     block_size: int = 16                  # KV block granularity
     max_batched_tokens: int = 512         # chunked-prefill token budget
     s_kv: Optional[int] = None            # real executor: KV tokens per slot
     chunk_pad: Optional[int] = None       # real executor: pad chunks (jit)
+    num_kv_blocks: Optional[int] = None   # paged executor: KV pool blocks
     # open-loop arrival process for workload driving (repro.workloads):
     # "fixed:I" | "poisson:RATE" | "burst:RATE[:B[:ON]]" | "ramp:LO:HI[:P]".
     # None = closed-loop trace replay (the historical behaviour).
@@ -139,8 +144,9 @@ class ServeSpec:
             raise ValueError(
                 "prefix caching (prefix_cache / '@cache' node suffix) "
                 "models KV reuse at the block-table level; the "
-                "RealExecutor's slot cache cannot serve cached prefixes, "
-                "so it is simulation-only")
+                "RealExecutor's slot cache cannot serve cached prefixes "
+                "— use executor='paged', whose block-pool KV serves "
+                "cache hits on real compute")
         for name in ("max_slots", "block_size", "max_batched_tokens"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1")
@@ -157,15 +163,24 @@ class ServeSpec:
                 "--cluster topologies")
         if self.s_kv is not None and self.s_kv < 1:
             raise ValueError("s_kv must be >= 1")
+        if self.num_kv_blocks is not None:
+            if self.num_kv_blocks < 1:
+                raise ValueError("num_kv_blocks must be >= 1")
+            if self.executor != "paged":
+                raise ValueError(
+                    "num_kv_blocks sizes the paged executor's real KV "
+                    "pool; with executor="
+                    f"{self.executor!r} the pool is device-HBM-derived "
+                    "(set executor='paged')")
         if self.arrival is not None:
             parse_arrival(self.arrival)   # raises ValueError on bad specs
         if self.autoscale is not None:
             from repro.autoscale import DeviceInventory, parse_autoscale
             parse_autoscale(self.autoscale)  # raises ValueError on bad specs
-            if self.executor == "real":
+            if self.executor in ("real", "paged"):
                 raise ValueError(
                     "autoscale builds new endpoints on the fly; the "
-                    "RealExecutor's compiled model state cannot be "
+                    "real executors' compiled model state cannot be "
                     "provisioned mid-run, so autoscaling is "
                     "simulation-only")
             if (self.inventory is None
@@ -236,11 +251,17 @@ class ServeSpec:
                             "(fcfs = seed-identical); per-endpoint "
                             "override via '@policy' in --cluster")
         g.add_argument("--prefix-cache", action="store_true",
-                       help="shared-prefix KV reuse (simulation-only; "
-                            "per-endpoint override via '@cache')")
+                       help="shared-prefix KV reuse (null or paged "
+                            "executor; per-endpoint override via "
+                            "'@cache')")
         g.add_argument("--real", action="store_true",
                        help="real JAX execution (executor='real'; use "
                             "with --smoke and a scaled trace)")
+        g.add_argument("--executor", default=None, choices=EXECUTORS,
+                       help="compute backend: null (simulated), real "
+                            "(per-slot dense KV), paged (block-pool KV "
+                            "driven by the engine's block tables; "
+                            "prefix-cache capable). Overrides --real")
         g.add_argument("--max-slots", type=int, default=None,
                        help="resident-request limit per engine "
                             "(default 256; 16 with --real)")
@@ -256,6 +277,10 @@ class ServeSpec:
         g.add_argument("--chunk-pad", type=int, default=None,
                        help="real executor: pad prefill chunks to this "
                             "multiple (fewer jit recompiles)")
+        g.add_argument("--num-kv-blocks", type=int, default=None,
+                       help="paged executor: KV pool size in blocks per "
+                            "engine (default: max_slots * "
+                            "ceil(s_kv / block_size))")
         g.add_argument("--arrival", default=cls._default("arrival"),
                        metavar="PROC",
                        help="open-loop arrival process: fixed:I | "
@@ -274,12 +299,14 @@ class ServeSpec:
 
     @classmethod
     def from_cli(cls, args) -> "ServeSpec":
-        executor = "real" if getattr(args, "real", False) else "null"
-        # --real keeps the historical CPU-scale defaults unless overridden
+        executor = getattr(args, "executor", None) or (
+            "real" if getattr(args, "real", False) else "null")
+        # real-compute runs keep the historical CPU-scale defaults unless
+        # overridden (--real is the back-compat spelling of executor=real)
         max_slots = args.max_slots if args.max_slots is not None else (
-            16 if executor == "real" else cls._default("max_slots"))
+            16 if executor != "null" else cls._default("max_slots"))
         block_size = args.block_size if args.block_size is not None else (
-            4 if executor == "real" else cls._default("block_size"))
+            4 if executor != "null" else cls._default("block_size"))
         return cls(arch=args.arch, smoke=args.smoke, approach=args.approach,
                    hi=args.hi, lo=args.lo, cluster=args.cluster,
                    router=args.router, sched_policy=args.sched_policy,
@@ -287,6 +314,7 @@ class ServeSpec:
                    max_slots=max_slots, block_size=block_size,
                    max_batched_tokens=args.max_batched_tokens,
                    s_kv=args.s_kv, chunk_pad=args.chunk_pad,
+                   num_kv_blocks=getattr(args, "num_kv_blocks", None),
                    arrival=args.arrival, autoscale=args.autoscale,
                    inventory=args.inventory)
 
@@ -307,6 +335,7 @@ class ServeSpec:
         """
         cfg = get_config(self.arch, smoke=self.smoke)
         factory = self._executor_factory(cfg, model, params)
+        num_kv_blocks = self.effective_num_kv_blocks()
         if self.cluster is not None:
             system = build_cluster(
                 cfg, self.cluster, router=self.router or "least_loaded",
@@ -314,7 +343,8 @@ class ServeSpec:
                 block_size=self.block_size,
                 max_batched_tokens=self.max_batched_tokens,
                 sched_policy=self.sched_policy,
-                prefix_cache=self.prefix_cache)
+                prefix_cache=self.prefix_cache,
+                num_kv_blocks=num_kv_blocks, executor=self.executor)
             service = InferenceService(system.endpoints, system.router,
                                        spec=self, cfg=cfg, system=system)
         else:
@@ -324,7 +354,8 @@ class ServeSpec:
                 block_size=self.block_size,
                 max_batched_tokens=self.max_batched_tokens,
                 sched_policy=self.sched_policy,
-                prefix_cache=self.prefix_cache)
+                prefix_cache=self.prefix_cache,
+                num_kv_blocks=num_kv_blocks, executor=self.executor)
             endpoints, router = self._pair_endpoints(system)
             service = InferenceService(endpoints, router, spec=self,
                                        cfg=cfg, system=system)
@@ -334,7 +365,8 @@ class ServeSpec:
             executor_factory=factory, max_slots=self.max_slots,
             block_size=self.block_size,
             max_batched_tokens=self.max_batched_tokens,
-            sched_policy=self.sched_policy, prefix_cache=self.prefix_cache)
+            sched_policy=self.sched_policy, prefix_cache=self.prefix_cache,
+            num_kv_blocks=num_kv_blocks, executor=self.executor)
         if self.autoscale is not None:
             from repro.autoscale import (Autoscaler, DeviceInventory,
                                          parse_autoscale)
@@ -360,21 +392,47 @@ class ServeSpec:
         router = make_router(self.router) if self.router else default
         return endpoints, router
 
+    def effective_num_kv_blocks(self) -> Optional[int]:
+        """KV pool size handed to the builders: the explicit override, or
+        for ``executor="paged"`` a pool that matches the slot executor's
+        aggregate capacity (``max_slots * ceil(s_kv / block_size)``) so
+        slot and paged runs admit identical batches by default. ``None``
+        (simulated / slot paths with no override) keeps each engine's
+        device-HBM-derived budget."""
+        if self.num_kv_blocks is not None:
+            return self.num_kv_blocks
+        if self.executor == "paged":
+            if self.s_kv is None:
+                raise ValueError(
+                    "executor='paged' needs s_kv (to size the default "
+                    "num_kv_blocks pool) or an explicit num_kv_blocks")
+            return self.max_slots * -(-self.s_kv // self.block_size)
+        return None
+
     def _executor_factory(self, cfg, model, params) -> Callable:
         if self.executor == "null":
             from repro.core.executor import NullExecutor
             return lambda role: NullExecutor()
-        if self.s_kv is None:
+        if self.executor == "real" and self.s_kv is None:
             raise ValueError(
                 "executor='real' needs s_kv (per-slot KV capacity in "
                 "tokens) — spec.replace(s_kv=max context + headroom)")
-        from repro.core.executor import RealExecutor
+        from repro.core.executor import PagedRealExecutor, RealExecutor
         if model is None:
             import jax
             from repro.models import build_model
             model = build_model(cfg, exact_moe=True)
             params = model.init_params(jax.random.PRNGKey(0))
         spec = self
+
+        if self.executor == "paged":
+            self.effective_num_kv_blocks()   # validate sizing up front
+
+            def factory(role):
+                # one executor per engine: each owns its own block pool,
+                # sized from EngineConfig.num_kv_blocks at attach_engine
+                return PagedRealExecutor(model, params)
+            return factory
 
         def factory(role):
             return RealExecutor(

@@ -29,13 +29,15 @@ def _null_factory(role: str):
 def build_system(approach: str, cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec,
                  *, max_slots: int = 256, block_size: int = 16,
                  max_batched_tokens: int = 512, executor_factory=None,
-                 sched_policy: str = "fcfs", prefix_cache: bool = False):
+                 sched_policy: str = "fcfs", prefix_cache: bool = False,
+                 num_kv_blocks=None, executor: str = "null"):
     executor_factory = executor_factory or _null_factory
     hi = DeviceModel(hi_spec, cfg)
     lo = DeviceModel(lo_spec, cfg)
     kw = dict(executor_factory=executor_factory, max_slots=max_slots,
               block_size=block_size, sched_policy=sched_policy,
-              prefix_cache=prefix_cache)
+              prefix_cache=prefix_cache, num_kv_blocks=num_kv_blocks,
+              executor=executor)
     if approach == "cronus":
         bal = Balancer(profile_prefill(lo), profile_chunked(hi))
         return build_cronus(cfg, lo, hi, balancer=bal,

@@ -54,8 +54,8 @@ def test_spec_from_dict_rejects_unknown_keys():
     (dict(sched_policy="edf"), "unknown sched policy"),
     (dict(executor="cuda"), "unknown executor"),
     (dict(cluster="9q:A10"), "bad node spec"),
-    (dict(executor="real", prefix_cache=True), "simulation-only"),
-    (dict(executor="real", cluster="2xworker:A10@cache"), "simulation-only"),
+    (dict(executor="real", prefix_cache=True), "executor='paged'"),
+    (dict(executor="real", cluster="2xworker:A10@cache"), "executor='paged'"),
     (dict(max_slots=0), "max_slots"),
     (dict(s_kv=0), "s_kv"),
     # dp/pp pin the paper's per-engine budgets; refuse a silently-ignored
