@@ -1,0 +1,151 @@
+"""Cluster-scale KV tiering: host-memory tier + KV-aware routing vs the
+PR 3 prefix-affinity baseline on a cache-thrashing shared-prefix trace.
+
+The rig is deliberately hostile to a GPU-only cache: four A10 workers
+with 768-block pools (12288 cached tokens each) against a 48-group,
+1024-token-prefix working set (~49k prefix tokens, ~4x one worker's
+pool). Under pure GPU caching, prefix_affinity keeps the hit rate up by
+*placement* — but every group that falls cold pays a full re-prefill.
+The tiered configuration adds a host-memory tier behind each pool
+(refcount-0 prefix blocks demote to host DRAM, promote back on a hit
+with the PCIe cost charged into iteration time) and the kv_aware router,
+which consults a cluster-wide prefix index plus live allocator probes
+that see both tiers.
+
+Two comparisons per trace density:
+
+  * ``baseline``  — prefix_affinity router, GPU-only cache (PR 3 setup);
+  * ``tiered``    — kv_aware router, host tier of HOST_KV_BLOCKS/worker.
+
+The win condition (self-gated below, and regression-gated in CI via
+``benchmarks/baselines/BENCH_kv_tiering.json``): tiered must beat
+baseline on prefix_cache_hit_rate AND not lose on TTFT p99 — i.e. the
+PCIe promotions it pays must cost less than the prefills it skips.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_kv_tiering
+[--quick] [--out BENCH_kv_tiering.json]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from benchmarks.common import DEFAULT_TBT_SLO, DEFAULT_TTFT_SLO, goodput
+from repro.cluster.router import KVAwareRouter, PrefixAffinityRouter
+from repro.cluster.runtime import ClusterRuntime, WorkerEndpoint
+from repro.configs import get_config
+from repro.core.engine import Engine, EngineConfig
+from repro.core.executor import NullExecutor
+from repro.serving.hardware import A10, DeviceModel
+from repro.serving.trace import make_shared_prefix_trace
+
+# Same starved pools as bench_prefix_cache's cluster rig: each worker
+# caches at most 768*16 = 12288 tokens.
+WORKER_KV_BLOCKS = 768
+# Host tier per worker: 4x the GPU pool (the @host DSL default), enough
+# for each worker's share of the working set to survive demotion.
+HOST_KV_BLOCKS = 3072
+N_WORKERS = 4
+N_PREFIXES = 48      # 48 * 1024 = ~49k prefix tokens, ~4x one GPU pool
+
+
+def _trace(n: int, interval: float, seed: int = 0):
+    return make_shared_prefix_trace(n, seed=seed, interval=interval,
+                                    n_prefixes=N_PREFIXES, prefix_len=1024,
+                                    mean_suffix_in=96, mean_out=24,
+                                    max_out=64)
+
+
+def _workers(cfg, host_blocks: int) -> List[WorkerEndpoint]:
+    eps = []
+    for i in range(N_WORKERS):
+        eng = Engine(f"w{i}", cfg,
+                     EngineConfig(max_slots=16,
+                                  num_kv_blocks=WORKER_KV_BLOCKS,
+                                  prefix_cache=True,
+                                  host_kv_blocks=host_blocks),
+                     DeviceModel(A10, cfg), NullExecutor())
+        eps.append(WorkerEndpoint(f"w{i}", eng, queue_cap=None))
+    return eps
+
+
+def _run(cfg, mode: str, reqs) -> Dict[str, float]:
+    if mode == "baseline":
+        eps = _workers(cfg, 0)
+        router = PrefixAffinityRouter()
+    else:
+        eps = _workers(cfg, HOST_KV_BLOCKS)
+        router = KVAwareRouter()
+    m = ClusterRuntime(eps, router).run(reqs)
+    m["goodput"] = goodput(reqs)
+    engines = [ep.engine for ep in eps]
+    m["tokens_reused"] = sum(e.allocator.n_tokens_reused for e in engines)
+    m["evictions"] = sum(e.allocator.n_evictions for e in engines)
+    m["demotions"] = sum(e.allocator.n_demotions for e in engines)
+    m["promotions"] = sum(e.allocator.n_promotions for e in engines)
+    m["host_evictions"] = sum(e.allocator.n_host_evictions
+                              for e in engines)
+    return m
+
+
+def run(n_requests: int = 400, arch: str = "llama3-8b",
+        out_path: str = None) -> List[Dict]:
+    cfg = get_config(arch)
+    rows: List[Dict] = []
+    results: Dict[tuple, Dict[str, float]] = {}
+
+    for interval, label in ((0.3, "steady"), (0.15, "burst")):
+        for mode in ("baseline", "tiered"):
+            reqs = _trace(n_requests, interval)
+            m = _run(cfg, mode, reqs)
+            results[(label, mode)] = m
+            row = {"rig": "cluster", "trace": f"shared_prefix_{label}",
+                   "policy": mode,
+                   "router": ("prefix_affinity" if mode == "baseline"
+                              else "kv_aware"),
+                   "cache": True, "ttft_slo": DEFAULT_TTFT_SLO,
+                   "tbt_slo": DEFAULT_TBT_SLO, **m}
+            rows.append(row)
+            print(f"kv_tiering/{label}/{mode},0,"
+                  f"tput={m['throughput']:.3f} "
+                  f"ttft_p99={m['ttft_p99']:.4f} "
+                  f"hit_rate={m.get('prefix_cache_hit_rate', 0.0):.3f} "
+                  f"reused={m['tokens_reused']} "
+                  f"demote={m['demotions']} promote={m['promotions']}")
+
+    # Self-gate: the host tier must pay for itself on BOTH densities.
+    for label in ("steady", "burst"):
+        base, tier = results[(label, "baseline")], results[(label, "tiered")]
+        hit_b = base.get("prefix_cache_hit_rate", 0.0)
+        hit_t = tier.get("prefix_cache_hit_rate", 0.0)
+        assert hit_t > hit_b, (
+            f"{label}: tiered hit rate {hit_t:.3f} <= baseline {hit_b:.3f}")
+        assert tier["ttft_p99"] <= base["ttft_p99"] * 1.02, (
+            f"{label}: tiered ttft_p99 {tier['ttft_p99']:.4f} worse than "
+            f"baseline {base['ttft_p99']:.4f}")
+        print(f"# GATE {label}: hit {hit_b:.3f} -> {hit_t:.3f}, "
+              f"ttft_p99 {base['ttft_p99']:.4f} -> {tier['ttft_p99']:.4f}")
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {out_path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller request count (CI smoke / regression gate)")
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--out", default=None,
+                    help="write rows as JSON (e.g. BENCH_kv_tiering.json)")
+    args = ap.parse_args()
+    n = args.n_requests or (160 if args.quick else 400)
+    run(n_requests=n, arch=args.arch, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -203,6 +203,7 @@ def build_endpoint(cfg, node: str, name: str, *,
                    sched_policy: str = "fcfs", prefix_cache: bool = False,
                    worker_queue_cap: Optional[int] = 4,
                    num_kv_blocks: Optional[int] = None,
+                   host_kv_blocks: int = 0,
                    executor: str = "null"):
     """Materialise one endpoint from a single-node topology-DSL string,
     under a caller-chosen unique ``name`` (the builder's positional
@@ -213,7 +214,8 @@ def build_endpoint(cfg, node: str, name: str, *,
         block_size=block_size, max_batched_tokens=max_batched_tokens,
         sched_policy=sched_policy, prefix_cache=prefix_cache,
         worker_queue_cap=worker_queue_cap,
-        num_kv_blocks=num_kv_blocks, executor=executor)
+        num_kv_blocks=num_kv_blocks, host_kv_blocks=host_kv_blocks,
+        executor=executor)
     (ep,) = system.endpoints
     ep.name = name
     return ep

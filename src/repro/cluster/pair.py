@@ -38,6 +38,10 @@ from repro.cluster.runtime import Endpoint
 
 
 class CronusPairEndpoint(Endpoint):
+    """One PPI+CPI Cronus pair as a routable endpoint: owns the paper's
+    per-request protocol (balancer split, ≤2 in the PPI, KV handoff,
+    bounded decode offload) over two engines."""
+
     def __init__(self, name: str, ppi: Engine, cpi: Engine, balancer,
                  max_ppi_requests: int = 2, decode_offload: bool = False,
                  max_offload_frac: float = 0.5):
@@ -53,6 +57,7 @@ class CronusPairEndpoint(Endpoint):
 
     @property
     def engines(self) -> Tuple[Engine, ...]:
+        """(PPI, CPI) — decode engine last by Endpoint convention."""
         # decode engine last: Endpoint.sched_policy / EndpointStats read
         # the pair's policy and free-KV signal from the CPI
         return (self.ppi, self.cpi)
@@ -65,6 +70,7 @@ class CronusPairEndpoint(Endpoint):
             and r.req_id not in self._in_ppi)
 
     def can_accept(self, req: Request) -> bool:
+        """Whether the PPI has room under the paper's ≤2-requests cap."""
         load = self._ppi_prefill_load()
         if load >= self.max_ppi_requests:
             return False
@@ -73,6 +79,8 @@ class CronusPairEndpoint(Endpoint):
         return req.arrival <= self.ppi.clock or load == 0
 
     def submit(self, req: Request, runtime=None):
+        """Dispatch one request through the pair protocol (steps 1-3):
+        pull CPI stats, choose the split, start the partial prefill."""
         self.ppi.clock = max(self.ppi.clock, req.arrival)
         stats = self.cpi.stats()                            # step (1)
         l_p = self.balancer.partial_prefill_length(          # step (2)
@@ -116,18 +124,21 @@ class CronusPairEndpoint(Endpoint):
             orig.ready_time = t_done
             if orig.req_id in self._offloaded:
                 orig.local_payload = True        # KV never leaves the PPI
-                target = self.ppi
+                target, dst = self.ppi, "ppi"
             else:
-                target = self.cpi
+                target, dst = self.cpi, "cpi"
             if runtime is not None:
-                # delivery closure re-checks the terminal state: a cancel
+                # the cluster transfer engine posts the delivery at t_done
+                # and re-checks the terminal state in its closure: a cancel
                 # landing between post and drain must not resurrect the
-                # request in the receiving queue
-                runtime.post(
-                    t_done,
-                    lambda r=orig, e=target:
-                        None if r.state is ReqState.CANCELLED
-                        else e.add_request(r))
+                # request in the receiving queue. Cost stays charge="ingest"
+                # — the receiving engine prices the wire when it ingests
+                # the payload (steps 6-7), overlapped with compute.
+                runtime.transfers.transfer(
+                    orig, src=f"{self.name}/ppi", dst=f"{self.name}/{dst}",
+                    deliver=target.add_request, when=t_done,
+                    n_tokens=0 if orig.local_payload else None,
+                    kind="handoff")
             else:
                 target.add_request(orig)
 
@@ -172,6 +183,85 @@ class CronusPairEndpoint(Endpoint):
                 displaced.append(r)
         return displaced
 
+    def migrate(self) -> List[Request]:
+        """Detach with KV carried out as migration payloads. PPI prefill
+        views with computed KV (completed-but-unpumped handoffs, or
+        mid-prefill residents) are folded back into their originals as
+        partial payloads — exactly the state a Cronus handoff would have
+        shipped — and CPI/PPI residents leave via
+        :meth:`~repro.core.engine.Engine.migrate_requests`. Requests with
+        nothing extractable strip to recompute, as in :meth:`drain`."""
+        displaced: List[Request] = []
+        for rid, orig in list(self._in_ppi.items()):
+            del self._in_ppi[rid]
+            self._offloaded.discard(rid)
+            done = next(((t, v) for t, v in self.ppi.completed_prefills
+                         if v.req_id == rid), None)
+            if done is not None:
+                # finished partial prefill awaiting pump: its payload is
+                # already extracted — complete the handoff into the
+                # original (PPI blocks were freed at completion)
+                t_done, view = done
+                self.ppi.completed_prefills = [
+                    (t, v) for t, v in self.ppi.completed_prefills
+                    if v.req_id != rid]
+                orig.partial_len = view.context_len
+                orig.context_len = view.context_len
+                orig.kv_payload = view.kv_payload
+                orig.first_token = view.first_token
+                orig.ready_time = t_done
+            else:
+                view = self._find_view(rid)
+                k = view.context_len if view is not None else 0
+                if k > 0 and view.slot is not None:
+                    # mid-prefill resident: carry the chunks computed so
+                    # far (extract BEFORE remove frees the block table)
+                    orig.kv_payload = self.ppi.executor.extract_kv(
+                        view.slot, k)
+                    orig.partial_len = k
+                    orig.context_len = k
+                    orig.first_token = None
+                    orig.ready_time = max(orig.arrival, self.ppi.clock)
+                else:
+                    orig.partial_len = 0
+                    orig.kv_payload = None
+                    orig.first_token = None
+                    orig.context_len = 0
+                    orig.ready_time = orig.arrival
+                self.ppi.remove_request(rid)
+            orig.local_payload = False
+            orig.state = ReqState.WAITING
+            displaced.append(orig)
+        for eng in (self.cpi, self.ppi):
+            for r in eng.migrate_requests():
+                self._offloaded.discard(r.req_id)
+                displaced.append(r)
+        return displaced
+
+    def _find_view(self, rid: str):
+        for r in self.ppi.slots:
+            if r is not None and r.req_id == rid:
+                return r
+        for r in self.ppi.queue:
+            if r.req_id == rid:
+                return r
+        return None
+
+    def accepts_kv(self, req: Request) -> bool:
+        """Migrated KV lands on the CPI directly (the PPI's job — partial
+        prefill — already happened on the source), so the PPI admission
+        cap doesn't gate it. A decode-only CPI can't chunk-prefill the
+        remainder, so there the payload must cover the whole prompt."""
+        if self.cpi.ecfg.decode_only and req.context_len < req.input_len:
+            return False
+        return True
+
+    def submit_kv(self, req: Request, runtime=None):
+        """Ingest a migrated request on the decode side."""
+        # straight to the CPI, ready_time untouched (the migration
+        # transfer gated delivery; ingest prices the wire)
+        self.cpi.add_request(req)
+
     def cancel(self, req: Request) -> bool:
         """Mid-flight cancel across the pair: the request may live as a
         PPI prefill view (queued, resident, or completed-but-unpumped),
@@ -199,7 +289,10 @@ class CronusPairEndpoint(Endpoint):
         return False
 
     def finished(self) -> List[Request]:
+        """Completions from both engines (offloaded decoders finish on
+        the PPI)."""
         return list(self.cpi.finished) + list(self.ppi.finished)
 
     def n_finished(self) -> int:
+        """Count of completions from both engines."""
         return len(self.cpi.finished) + len(self.ppi.finished)

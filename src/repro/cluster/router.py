@@ -27,6 +27,11 @@ Policies:
     concentrate where their KV already lives; cache-cold requests fall
     through to least-loaded, and a load guard keeps affinity from
     convoying a hot endpoint.
+  * :class:`KVAwareRouter` — cluster-level prefix *content* index: one
+    global chain-hash map of which endpoints hold which prefix blocks
+    (GPU or host tier), strengthened by the live allocator probe, with
+    an optional cross-endpoint prefix fetch through the cluster
+    transfer engine when load forces a request away from its KV.
 """
 from __future__ import annotations
 
@@ -40,6 +45,8 @@ from repro.kvcache.allocator import _chain
 
 
 class Router(abc.ABC):
+    """Routing policy: pick an endpoint for each dispatched request."""
+
     @abc.abstractmethod
     def select(self, req: Request,
                endpoints: Sequence[Endpoint]) -> Optional[Endpoint]:
@@ -53,6 +60,8 @@ class Router(abc.ABC):
 
 
 class RoundRobinRouter(Router):
+    """Rotate over the endpoints, optionally weighted (dp's pattern)."""
+
     def __init__(self, weights: Optional[List[int]] = None):
         self.weights = weights
         self._pattern: Optional[List[int]] = None
@@ -67,6 +76,7 @@ class RoundRobinRouter(Router):
         return self._pattern
 
     def select(self, req, endpoints):
+        """Next accepting endpoint in the (weighted) rotation."""
         pat = self._pat(len(endpoints))
         for probe in range(len(pat)):
             ep = endpoints[pat[(self._idx + probe) % len(pat)]]
@@ -76,6 +86,7 @@ class RoundRobinRouter(Router):
         return None
 
     def on_membership_change(self, endpoints):
+        """Rebuild the rotation for the new fleet size."""
         # the pattern is positional, so it must be rebuilt for the new
         # membership; explicit weights were given for a specific fleet
         # size and cannot be remapped onto a different one — degrade to
@@ -87,7 +98,10 @@ class RoundRobinRouter(Router):
 
 
 class LeastLoadedRouter(Router):
+    """Shallowest queue first; ties broken by free KV, then position."""
+
     def select(self, req, endpoints):
+        """Accepting endpoint with the shallowest queue."""
         best, best_key = None, None
         for i, ep in enumerate(endpoints):
             if not ep.can_accept(req):
@@ -100,6 +114,10 @@ class LeastLoadedRouter(Router):
 
 
 class SessionAffinityRouter(Router):
+    """Pin each conversation (``req.session``) to one endpoint for KV
+    locality, rebalancing via the fallback when the home endpoint stalls
+    or runs ``imbalance``x deeper than the best alternative."""
+
     # a sticky head whose home endpoint is full returns None; let the
     # runtime place up to this many queued requests past it so one pinned
     # session doesn't convoy the whole arrival queue
@@ -125,6 +143,7 @@ class SessionAffinityRouter(Router):
         return home.stats().queue_depth > self.imbalance * (min(others) + 1)
 
     def select(self, req, endpoints):
+        """The session's home endpoint, or a fresh pin via the fallback."""
         sess = getattr(req, "session", None)
         if sess is not None and sess in self._table:
             ep = self._table[sess]
@@ -148,6 +167,7 @@ class SessionAffinityRouter(Router):
         return ep
 
     def on_membership_change(self, endpoints):
+        """Un-home sessions whose endpoint left the cluster."""
         # un-home sessions whose endpoint left the cluster: they re-pin
         # through the fallback on their next request instead of sticking
         # to (and stalling on) a ghost endpoint
@@ -222,6 +242,7 @@ class PrefixAffinityRouter(Router):
             seen.popitem(last=False)
 
     def select(self, req, endpoints):
+        """Longest-cached-prefix endpoint, under the load guard."""
         bs = endpoints[0].engines[-1].ecfg.block_size
         hashes = self._prompt_hashes(req, bs)
         cands = [ep for ep in endpoints if ep.can_accept(req)]
@@ -246,6 +267,7 @@ class PrefixAffinityRouter(Router):
         return ep
 
     def on_membership_change(self, endpoints):
+        """Forget detached endpoints' routing histories."""
         # forget detached endpoints' histories (their KV left with them);
         # a re-attached name starts cold, which is exactly its cache state
         live = {ep.name for ep in endpoints}
@@ -254,15 +276,153 @@ class PrefixAffinityRouter(Router):
         self.fallback.on_membership_change(endpoints)
 
 
+class KVAwareRouter(Router):
+    """Cluster-level prefix index: route each request to the endpoint
+    whose KV caches — GPU *or* host tier — hold the longest prefix of its
+    prompt (Mooncake/Dynamo-style KV-aware scheduling).
+
+    Where :class:`PrefixAffinityRouter` keeps a per-endpoint *routing
+    history* (where prompts were sent), this router maintains one global
+    chain-hash index of where prefix *content* lives, updated on every
+    placement — so two endpoints that both hold a hot prefix are both
+    credited, and eviction-driven staleness is bounded by the live probe
+    (``Endpoint.cached_prefix_tokens`` walks the real allocator indexes,
+    including host-demoted chains) taken as the stronger of the two
+    signals.
+
+    Optionally (``fetch=True``) a routed-away request triggers a
+    *cross-endpoint prefix fetch*: when the best-matching endpoint loses
+    to the load guard, the chosen endpoint's allocator adopts the matched
+    prefix through the cluster :class:`~repro.kvcache.TransferEngine`
+    (kind ``prefix_fetch``, wire time on the destination's link) so the
+    hot prefix replicates to where traffic actually lands. The fetch is a
+    cache warm — it gates no request — and models KV movement only, so it
+    is limited to the simulated (``executor="null"``) path: real paged
+    pools would need cross-pool page copies.
+    """
+
+    def __init__(self, fallback: Optional[Router] = None,
+                 min_match: int = 16, max_imbalance: int = 4,
+                 index_size: int = 65536, fetch: bool = False,
+                 min_fetch: int = 512):
+        self.fallback = fallback or LeastLoadedRouter()
+        self.min_match = min_match
+        self.max_imbalance = max_imbalance
+        self.index_size = index_size
+        self.fetch = fetch
+        self.min_fetch = min_fetch
+        self._index: OrderedDict = OrderedDict()   # hash -> {endpoint names}
+        self._runtime = None
+        self.n_fetches = 0
+
+    def bind_runtime(self, runtime) -> None:
+        """Called by :class:`~repro.cluster.runtime.ClusterRuntime` on
+        construction: gives the router access to the cluster transfer
+        engine for prefix fetches."""
+        self._runtime = runtime
+
+    # ------------------------------------------------------------------
+    def _prompt_hashes(self, req, block_size: int) -> List[bytes]:
+        hashes, h = [], b""
+        prompt = req.prompt
+        for lo in range(0, len(prompt) - block_size + 1, block_size):
+            h = _chain(h, prompt[lo:lo + block_size])
+            hashes.append(h)
+        return hashes
+
+    def _index_match(self, name: str, hashes: List[bytes],
+                     block_size: int) -> int:
+        n = 0
+        for h in hashes:
+            holders = self._index.get(h)
+            if not holders or name not in holders:
+                break
+            n += block_size
+        return n
+
+    def _record(self, name: str, hashes: List[bytes]):
+        for h in hashes:
+            holders = self._index.get(h)
+            if holders is None:
+                self._index[h] = {name}
+            else:
+                holders.add(name)
+                self._index.move_to_end(h)
+        while len(self._index) > self.index_size:
+            self._index.popitem(last=False)
+
+    def _maybe_fetch(self, req, src: Endpoint, dst: Endpoint,
+                     n_tokens: int, hashes: List[bytes]) -> None:
+        if (not self.fetch or self._runtime is None
+                or n_tokens < self.min_fetch):
+            return
+        eng = dst.engines[-1]
+        if eng.ecfg.executor != "null" or not eng.ecfg.prefix_cache:
+            return
+        alloc = eng.allocator
+        self._runtime.transfers.transfer(
+            req, src=src.name, dst=dst.name,
+            deliver=lambda r, a=alloc, n=n_tokens: a.adopt_prefix(r.prompt, n),
+            when=max(req.arrival, src.stats().clock),
+            n_tokens=n_tokens, device_model=eng.device,
+            charge="link", kind="prefix_fetch")
+        self._record(dst.name, hashes)
+        self.n_fetches += 1
+
+    # ------------------------------------------------------------------
+    def select(self, req, endpoints):
+        """Best KV-holding endpoint (index + two-tier probe), under the
+        load guard; optionally fetches the prefix to the loaded choice."""
+        bs = endpoints[0].engines[-1].ecfg.block_size
+        hashes = self._prompt_hashes(req, bs)
+        cands = [ep for ep in endpoints if ep.can_accept(req)]
+        if not cands:
+            return None
+        best, best_len = None, self.min_match - 1
+        for ep in cands:
+            n = max(ep.cached_prefix_tokens(req),
+                    self._index_match(ep.name, hashes, bs))
+            if n > best_len:
+                best, best_len = ep, n
+        if best is not None:
+            floor = min(ep.stats().queue_depth for ep in cands)
+            if best.stats().queue_depth <= floor + self.max_imbalance:
+                self._record(best.name, hashes)
+                return best
+        ep = self.fallback.select(req, endpoints)
+        if ep is not None:
+            if best is not None and ep is not best:
+                # the prefix lives on `best` but load pushed the request
+                # to `ep`: optionally replicate the hot prefix over there
+                self._maybe_fetch(req, best, ep, best_len, hashes)
+            self._record(ep.name, hashes)
+        return ep
+
+    def on_membership_change(self, endpoints):
+        """Scrub detached endpoints out of the content index."""
+        # scrub detached endpoints out of the content index (their pools
+        # left with them); entries with no holder left disappear
+        live = {ep.name for ep in endpoints}
+        for h in list(self._index):
+            holders = self._index[h] & live
+            if holders:
+                self._index[h] = holders
+            else:
+                del self._index[h]
+        self.fallback.on_membership_change(endpoints)
+
+
 ROUTERS = {
     "round_robin": RoundRobinRouter,
     "least_loaded": LeastLoadedRouter,
     "session": SessionAffinityRouter,
     "prefix_affinity": PrefixAffinityRouter,
+    "kv_aware": KVAwareRouter,
 }
 
 
 def make_router(name: str, **kw) -> Router:
+    """Instantiate a registered router by name (see ``ROUTERS``)."""
     try:
         return ROUTERS[name](**kw)
     except KeyError:

@@ -32,9 +32,12 @@ import itertools
 from collections import deque
 from typing import Callable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.engine import Engine
 from repro.core.metrics import aggregate
 from repro.core.request import ReqState, Request
+from repro.kvcache.transfer import TransferEngine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +112,7 @@ class Endpoint(abc.ABC):
         return self.engines[-1].ecfg.sched_policy
 
     def stats(self) -> EndpointStats:
+        """Live load/capacity snapshot the routers and autoscaler read."""
         engines = self.engines
         queued = sum(len(e.queue) for e in engines) + sum(
             1 for e in engines for r in e.slots if r is not None)
@@ -134,6 +138,31 @@ class Endpoint(abc.ABC):
         the endpoint holds no work and allocator invariants are clean."""
         return [r for e in self.engines for r in e.drain_requests()]
 
+    def migrate(self) -> List[Request]:
+        """Evict every resident and queued request, carrying its computed
+        KV *as a payload* instead of discarding it (detach with
+        ``migrate=True``). Displaced requests re-enter the pending queue
+        as KV-carrying migrants; the dispatcher ships each one through
+        the cluster :class:`~repro.kvcache.TransferEngine` to an endpoint
+        that ``accepts_kv`` it, falling back to recompute when none does.
+        Requests with nothing extractable (still queued, or mid-transfer
+        with no local KV) degrade to the same strip ``drain`` applies."""
+        return [r for e in self.engines for r in e.migrate_requests()]
+
+    def accepts_kv(self, req: Request) -> bool:
+        """May a KV-carrying migrant be shipped here right now? Default
+        False: only endpoints that know how to ingest a foreign payload
+        opt in."""
+        return False
+
+    def submit_kv(self, req: Request,
+                  runtime: Optional["ClusterRuntime"] = None):
+        """Take ownership of a migrated KV-carrying request *without*
+        resetting its ``ready_time`` (the transfer engine already gated
+        delivery on it)."""
+        raise NotImplementedError(
+            f"endpoint {self.name!r} does not ingest migrated KV")
+
 
 class WorkerEndpoint(Endpoint):
     """A standalone chunked-prefill+decode instance (DP worker, or the
@@ -151,21 +180,40 @@ class WorkerEndpoint(Endpoint):
 
     @property
     def engines(self) -> Tuple[Engine, ...]:
+        """The single wrapped engine."""
         return (self.engine,)
 
     def can_accept(self, req: Request) -> bool:
+        """Whether the engine's queue has room (``queue_cap=None``: always)."""
         if self.queue_cap is None:
             return True
         return len(self.engine.queue) < self.queue_cap
 
     def submit(self, req: Request, runtime=None):
+        """Queue a routed request on the engine (ready at its arrival)."""
         req.ready_time = req.arrival
         self.engine.add_request(req)
 
+    def accepts_kv(self, req: Request) -> bool:
+        """Whether this worker will ingest a migrated request's KV."""
+        # a chunked worker can resume any migrant: ingest places it
+        # straight into decode when the payload covers the prompt, or
+        # continues the partial prefill otherwise
+        return self.can_accept(req)
+
+    def submit_kv(self, req: Request, runtime=None):
+        """Ingest a migrated request, KV payload and all."""
+        # deliberately NOT resetting ready_time: the migration transfer
+        # gated delivery on it, and the payload's KV is only valid from
+        # the moment the source finished extracting it
+        self.engine.add_request(req)
+
     def finished(self) -> List[Request]:
+        """Requests this endpoint completed."""
         return list(self.engine.finished)
 
     def n_finished(self) -> int:
+        """Count of completed requests."""
         return len(self.engine.finished)
 
 
@@ -191,6 +239,13 @@ class ClusterRuntime:
         # and the n_finished termination condition never lose them
         self.retired: List[Request] = []
         self._draining: set = set()   # endpoint names closed to routing
+        # every cross-pool KV move (PPI->CPI handoff, detach migration,
+        # prefix fetch) goes through the one cluster transfer engine
+        self.transfers = TransferEngine(self)
+        for ep in self.endpoints:
+            self.transfers.register(ep)
+        if hasattr(router, "bind_runtime"):
+            router.bind_runtime(self)
 
     # ------------------------------------------------------------------
     # timed events
@@ -226,19 +281,26 @@ class ClusterRuntime:
             eng.busy_since = eng.clock
         self.endpoints.append(ep)
         self.engines = [e for ep_ in self.endpoints for e in ep_.engines]
+        self.transfers.register(ep)
         self.router.on_membership_change(self.endpoints)
 
     def detach_endpoint(self, name: str,
-                        pending: Optional[deque] = None) -> Endpoint:
+                        pending: Optional[deque] = None,
+                        migrate: bool = False) -> Endpoint:
         """Remove endpoint ``name`` from the live cluster, losing no work:
         the endpoint is first marked unroutable, its residents are drained
-        via the preemption-by-recompute path (generated tokens folded into
-        the prompt; in-flight PPI handoffs recomputed), the displaced
-        requests are requeued into ``pending`` for re-routing, its
-        finished requests are retired into fleet metrics, and only then
-        are its engines removed from the event loop — with every
-        allocator's ``check_invariants`` verified clean. Call between
-        ticks (posted events are always drained within a tick)."""
+        — via the preemption-by-recompute path by default, or carrying
+        their computed KV as migration payloads when ``migrate=True`` —
+        the displaced requests are requeued into ``pending`` for
+        re-routing, its finished requests are retired into fleet metrics,
+        and only then are its engines removed from the event loop — with
+        every allocator's ``check_invariants`` verified clean. Call
+        between ticks (posted events are always drained within a tick).
+
+        With ``migrate=True`` the dispatcher ships each KV-carrying
+        migrant through :attr:`transfers` to an endpoint that
+        ``accepts_kv`` it; migrants nobody accepts fall back to
+        recompute, so migration is never worse than drain."""
         for ep in self.endpoints:
             if ep.name == name:
                 break
@@ -247,7 +309,9 @@ class ClusterRuntime:
                            f"{[e.name for e in self.endpoints]}")
         self._draining.add(name)
         try:
-            displaced = ep.drain()
+            displaced = ep.migrate() if migrate else ep.drain()
+            for r in displaced:
+                r.kv_src = name    # transfer-accounting source tag
             if displaced and pending is None:
                 raise RuntimeError(
                     f"endpoint {name!r} holds {len(displaced)} unfinished "
@@ -271,6 +335,7 @@ class ClusterRuntime:
             self.endpoints.remove(ep)
             self.engines = [e for ep_ in self.endpoints
                             for e in ep_.engines]
+            self.transfers.deregister(name)
             self.router.on_membership_change(self.endpoints)
         finally:
             self._draining.discard(name)
@@ -278,6 +343,7 @@ class ClusterRuntime:
 
     # ------------------------------------------------------------------
     def n_finished(self) -> int:
+        """Completions fleet-wide, including detached endpoints' retirees."""
         return sum(ep.n_finished() for ep in self.endpoints) \
             + len(self.retired)
 
@@ -295,6 +361,17 @@ class ClusterRuntime:
             if not endpoints:
                 return
         while pending:
+            head = pending[0]
+            if head.kv_payload is not None and not head.local_payload \
+                    and head.slot is None:
+                # detach-time migrant carrying extracted KV: ship it
+                # through the transfer engine to an endpoint that can
+                # ingest the payload; nobody willing -> recompute
+                pending.popleft()
+                if not self._route_kv(head, endpoints):
+                    _strip_to_recompute(head)
+                    pending.appendleft(head)   # re-route as a fresh job
+                continue
             ep = self.router.select(pending[0], endpoints)
             if ep is not None:
                 ep.submit(pending.popleft(), self)
@@ -315,6 +392,26 @@ class ClusterRuntime:
             req = pending[placed_at]
             del pending[placed_at]
             ep.submit(req, self)
+
+    def _route_kv(self, req: Request, endpoints: List[Endpoint]) -> bool:
+        """Ship a KV-carrying migrant to the least-loaded endpoint that
+        will ingest it. The transfer engine schedules delivery at the
+        migrant's ``ready_time`` (when extraction finished on the source)
+        and the receiving engine charges the wire cost at ingest, exactly
+        like a Cronus handoff. False when no endpoint accepts — the
+        caller strips the payload and falls back to recompute routing."""
+        acceptors = [ep for ep in endpoints if ep.accepts_kv(req)]
+        if not acceptors:
+            return False
+        stats = [(ep.stats(), i, ep) for i, ep in enumerate(acceptors)]
+        _, _, dst = min(stats,
+                        key=lambda t: (t[0].queue_depth,
+                                       -t[0].free_kv_blocks, t[1]))
+        self.transfers.transfer(
+            req, src=req.kv_src or "detached", dst=dst.name,
+            deliver=lambda r, e=dst: e.submit_kv(r, self),
+            when=req.ready_time, kind="migration")
+        return True
 
     def tick(self, pending: deque) -> bool:
         """One round of the event loop: dispatch pending arrivals, move
@@ -393,6 +490,27 @@ class ClusterRuntime:
         return aggregate([r.metrics for ep in self.endpoints
                           for r in ep.finished()]
                          + [r.metrics for r in self.retired])
+
+
+def _strip_to_recompute(r: Request) -> None:
+    """Turn an unplaceable KV migrant back into a recompute job: fold its
+    generated tokens into the prompt (the preemption discipline — they
+    are committed output, replayed as context) and drop every payload
+    field, so normal routing sees a fresh-looking request."""
+    if r.generated:
+        r.prompt = np.concatenate(
+            [r.prompt, np.asarray(r.generated, np.int32)])
+        r.output_len -= len(r.generated)
+        r.generated = []
+        r.preempted = True
+    r.kv_payload = None
+    r.first_token = None
+    r.local_payload = False
+    r.partial_len = 0
+    r.context_len = 0
+    r.kv_src = None
+    r.state = ReqState.WAITING
+    r.ready_time = r.arrival
 
 
 def check_requests_fresh(requests: Sequence[Request]) -> None:

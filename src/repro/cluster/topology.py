@@ -18,6 +18,14 @@ A spec is a list of :class:`NodeSpec` (or the compact string DSL):
            engines (``EngineConfig.prefix_cache``); combine with
            ``router="prefix_affinity"`` so requests chase their prefix.
 
+    "4xworker:A10@cache@host"
+        -> ``@host`` adds a host-memory cache tier behind each engine's
+           GPU pool (``EngineConfig.host_kv_blocks``): refcount-0 prefix
+           blocks demote to host DRAM instead of being dropped and
+           promote back on a hit, PCIe cost charged. Requires caching
+           (``@cache`` or the cluster-wide ``prefix_cache``); sized
+           4x the GPU pool unless ``host_kv_blocks`` is given globally.
+
 Node kinds:
   * ``cronus:HI+LO``    — Balancer-split pair, prefill on LO, decode on HI
   * ``disagg_lh:HI+LO`` — full prefill on LO, decode-only HI
@@ -52,6 +60,9 @@ _NODE_RE = re.compile(
 
 @dataclasses.dataclass(frozen=True)
 class NodeSpec:
+    """One parsed ``[count x]kind:devices[@options]`` node of a cluster
+    spec."""
+
     kind: str                       # one of NODE_KINDS
     devices: Tuple[str, ...]        # ("A100", "A10") for pairs, ("A10",) ...
     count: int = 1
@@ -80,11 +91,14 @@ class NodeSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
+    """A parsed cluster DSL string: node list + router choice."""
+
     nodes: Tuple[NodeSpec, ...]
     router: str = "least_loaded"
 
     @property
     def n_engines(self) -> int:
+        """Engines the spec materialises (pairs count 2, pp fuses to 1)."""
         per = {"worker": 1, "pp": 1}
         return sum(per.get(n.kind, 2) * n.count for n in self.nodes)
 
@@ -93,25 +107,28 @@ def parse_cluster_spec(text: str, router: str = "least_loaded") -> ClusterSpec:
     """Parse the compact DSL, e.g.
     ``"2xcronus:A100+A10,4xworker:A10@sarathi@cache"``. ``@`` suffixes
     stack: a scheduling-policy name picks the node's batch-composition
-    policy, the literal ``cache`` enables shared-prefix KV reuse."""
+    policy, the literal ``cache`` enables shared-prefix KV reuse and
+    ``host`` puts a host-memory cache tier behind the GPU pool."""
     nodes = []
     for part in filter(None, (p.strip() for p in text.split(","))):
         m = _NODE_RE.match(part)
         if m is None:
             raise ValueError(f"bad node spec {part!r} (expected "
                              "[<count>x]<kind>:<dev>[+<dev>][@<policy>]"
-                             "[@cache])")
+                             "[@cache][@host])")
         count, kind, devs, suffixes = m.groups()
         options: Dict = {}
         for suffix in filter(None, (suffixes or "").split("@")):
             if suffix == "cache":
                 options["prefix_cache"] = True
+            elif suffix == "host":
+                options["host_tier"] = True
             elif suffix in SCHEDULERS:
                 options["sched_policy"] = suffix
             else:
                 raise ValueError(
                     f"unknown node suffix @{suffix} in {part!r}; expected "
-                    f"'cache' or a policy from {sorted(SCHEDULERS)}")
+                    f"'cache', 'host' or a policy from {sorted(SCHEDULERS)}")
         nodes.append(NodeSpec(kind=kind, devices=tuple(devs.split("+")),
                               count=int(count or 1), options=options))
     if not nodes:
@@ -131,12 +148,15 @@ class ClusterSystem:
 
     @property
     def engines(self) -> List[Engine]:
+        """Every engine across every endpoint."""
         return [e for ep in self.endpoints for e in ep.engines]
 
     def finished(self):
+        """Completed requests across the whole cluster."""
         return [r for ep in self.endpoints for r in ep.finished()]
 
     def run(self, requests, max_steps: int = 10_000_000):
+        """Replay a trace through a fresh runtime; aggregate metrics."""
         return ClusterRuntime(self.endpoints, self.router).run(
             requests, max_steps)
 
@@ -162,6 +182,7 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                   sched_policy: str = "fcfs",
                   prefix_cache: bool = False,
                   num_kv_blocks: Optional[int] = None,
+                  host_kv_blocks: int = 0,
                   executor: str = "null") -> ClusterSystem:
     """Materialise a :class:`ClusterSpec` into engines + endpoints.
 
@@ -177,6 +198,12 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
     device-HBM-derived KV pool size (required with ``executor="paged"``,
     whose pool is materialized for real); ``executor`` names the compute
     backend the factory builds so each EngineConfig records it.
+
+    ``host_kv_blocks`` > 0 adds a host-memory cache tier of that many
+    blocks behind every *cached* node's engines; a node's ``@host``
+    suffix opts in per node (sized 4x the node's GPU pool when no global
+    size is given). ``@host`` on a node without prefix caching raises —
+    the tier holds demoted prefix-cache content.
     """
     # imported lazily: core.cronus/baselines import the cluster runtime
     from repro.core.balancer import Balancer
@@ -192,8 +219,22 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
               num_kv_blocks=num_kv_blocks, executor=executor)
 
     def pool(device) -> int:
+        """Per-engine GPU KV pool size (override or HBM-derived)."""
         return (num_kv_blocks if num_kv_blocks is not None
                 else max(device.kv_block_budget(block_size), 64))
+
+    def host_tier(node, cache: bool, gpu_pool: int) -> int:
+        """Host-tier blocks for a node: @host default 4x the GPU pool,
+        global ``host_kv_blocks`` overrides; requires caching."""
+        tier = node.options.get("host_tier", False)
+        if tier and not cache:
+            raise ValueError(
+                f"node {node.kind}:{'+'.join(node.devices)}: @host requires "
+                "prefix caching (@cache suffix or prefix_cache=True) — the "
+                "host tier holds demoted prefix-cache content")
+        if not cache or not (tier or host_kv_blocks):
+            return 0
+        return host_kv_blocks if host_kv_blocks else 4 * gpu_pool
 
     endpoints: List[Endpoint] = []
     for node in spec.nodes:
@@ -204,21 +245,27 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
             if node.kind in PAIR_KINDS:
                 hi_spec, lo_spec = (DEVICES[d] for d in node.devices)
                 hi, lo = DeviceModel(hi_spec, cfg), DeviceModel(lo_spec, cfg)
+                # host tier sized off the decode-side pool (where the
+                # shared-prefix working set actually lives)
+                decode_model = lo if node.kind == "disagg_hl" else hi
+                host = host_tier(node, cache, pool(decode_model))
                 if node.kind == "cronus":
                     bal = Balancer(profile_prefill(lo), profile_chunked(hi))
                     system = build_cronus(
                         cfg, lo, hi, balancer=bal, sched_policy=policy,
-                        prefix_cache=cache,
+                        prefix_cache=cache, host_kv_blocks=host,
                         decode_offload=node.options.get("decode_offload",
                                                         False), **kw)
                 elif node.kind == "disagg_lh":
                     system = build_disaggregated(cfg, lo, hi,
                                                  sched_policy=policy,
-                                                 prefix_cache=cache, **kw)
+                                                 prefix_cache=cache,
+                                                 host_kv_blocks=host, **kw)
                 else:                                   # disagg_hl
                     system = build_disaggregated(cfg, hi, lo,
                                                  sched_policy=policy,
-                                                 prefix_cache=cache, **kw)
+                                                 prefix_cache=cache,
+                                                 host_kv_blocks=host, **kw)
                 endpoints.append(system.endpoint(name))
             elif node.kind == "pp":
                 hi_spec, lo_spec = (DEVICES[d] for d in node.devices)
@@ -229,6 +276,8 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                                  max_slots=max_slots, block_size=block_size,
                                  num_kv_blocks=pool(device),
                                  sched_policy=policy, prefix_cache=cache,
+                                 host_kv_blocks=host_tier(node, cache,
+                                                          pool(device)),
                                  executor=executor),
                              device, executor_factory("pp"))
                 endpoints.append(WorkerEndpoint(name, eng, queue_cap=None))
@@ -241,6 +290,8 @@ def build_cluster(cfg, spec: Union[ClusterSpec, str], *,
                                  max_slots=max_slots, block_size=block_size,
                                  num_kv_blocks=pool(dev),
                                  sched_policy=policy, prefix_cache=cache,
+                                 host_kv_blocks=host_tier(node, cache,
+                                                          pool(dev)),
                                  executor=executor),
                              dev, executor_factory("worker"))
                 endpoints.append(WorkerEndpoint(

@@ -14,7 +14,8 @@ from repro.core.engine import Engine, EngineConfig
 from repro.core.request import Request
 from repro.serving.hardware import (DeviceModel, DeviceSpec, active_param_bytes,
                                     attn_flops, kv_bytes_per_token,
-                                    matmul_flops_per_token, param_bytes)
+                                    matmul_flops_per_token, param_bytes,
+                                    transfer_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -49,6 +50,7 @@ def build_dp(cfg, hi_device: DeviceModel, lo_device: DeviceModel, *,
              block_size: int = 16, sched_policy: str = "fcfs",
              prefix_cache: bool = False,
              num_kv_blocks: Optional[int] = None,
+             host_kv_blocks: int = 0,
              executor: str = "null") -> DPSystem:
     hi = Engine("dp-hi", cfg,
                 EngineConfig(max_batched_tokens=512, max_slots=max_slots,
@@ -57,7 +59,9 @@ def build_dp(cfg, hi_device: DeviceModel, lo_device: DeviceModel, *,
                                             is not None else
                                             max(hi_device.kv_block_budget(block_size), 64)),
                              sched_policy=sched_policy,
-                             prefix_cache=prefix_cache, executor=executor),
+                             prefix_cache=prefix_cache,
+                             host_kv_blocks=host_kv_blocks,
+                             executor=executor),
                 hi_device, executor_factory("hi"))
     lo = Engine("dp-lo", cfg,
                 EngineConfig(max_batched_tokens=256, max_slots=max_slots,
@@ -66,7 +70,9 @@ def build_dp(cfg, hi_device: DeviceModel, lo_device: DeviceModel, *,
                                             is not None else
                                             max(lo_device.kv_block_budget(block_size), 64)),
                              sched_policy=sched_policy,
-                             prefix_cache=prefix_cache, executor=executor),
+                             prefix_cache=prefix_cache,
+                             host_kv_blocks=host_kv_blocks,
+                             executor=executor),
                 lo_device, executor_factory("lo"))
     return DPSystem(engines=[hi, lo], weights=[3, 1], queue_caps=[3, 1])
 
@@ -121,6 +127,10 @@ class PipelineDeviceModel:
     def transfer_time(self, n_tokens: int) -> float:
         return 0.0
 
+    def host_kv_time(self, n_tokens: int) -> float:
+        # both stages share the hi host's PCIe attach for the modeled tier
+        return transfer_bytes(self.cfg, n_tokens) / self.hi.pcie_bw
+
     def kv_block_budget(self, block_size: int, mem_frac: float = 0.9) -> int:
         """Each stage holds its fraction of layers' KV; capacity is the min
         over stages (paper §3.3: reduced effective batch size)."""
@@ -151,6 +161,7 @@ def build_pp(cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec, *,
              block_size: int = 16, sched_policy: str = "fcfs",
              prefix_cache: bool = False,
              num_kv_blocks: Optional[int] = None,
+             host_kv_blocks: int = 0,
              executor: str = "null") -> PPSystem:
     device = PipelineDeviceModel(hi_spec, lo_spec, cfg)
     eng = Engine("pp", cfg,
@@ -160,6 +171,8 @@ def build_pp(cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec, *,
                                              is not None else
                                              max(device.kv_block_budget(block_size), 64)),
                               sched_policy=sched_policy,
-                              prefix_cache=prefix_cache, executor=executor),
+                              prefix_cache=prefix_cache,
+                              host_kv_blocks=host_kv_blocks,
+                              executor=executor),
                  device, executor_factory("pp"))
     return PPSystem(engine=eng)

@@ -100,6 +100,7 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
                  sched_policy: str = "fcfs",
                  prefix_cache: bool = False,
                  num_kv_blocks: Optional[int] = None,
+                 host_kv_blocks: int = 0,
                  executor: str = "null") -> CronusSystem:
     """executor_factory(role: str) -> executor ('ppi' | 'cpi').
 
@@ -111,7 +112,11 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
     shortens the chunked remainder. ``num_kv_blocks`` overrides the
     device-HBM-derived KV pool size on both engines — required for the
     paged executor, which materializes the pool for real; ``executor``
-    records the compute backend in each EngineConfig."""
+    records the compute backend in each EngineConfig. ``host_kv_blocks``
+    adds a host-memory cache tier of that many blocks to both engines
+    (requires ``prefix_cache``): refcount-0 prefix blocks demote to host
+    DRAM instead of being dropped, and promote back on a hit, with the
+    PCIe cost charged into each engine's iteration time."""
     ppi_blocks = (num_kv_blocks if num_kv_blocks is not None
                   else max(ppi_device.kv_block_budget(block_size), 64))
     cpi_blocks = (num_kv_blocks if num_kv_blocks is not None
@@ -122,7 +127,9 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
                               block_size=block_size,
                               num_kv_blocks=ppi_blocks, prefill_only=True,
                               sched_policy=sched_policy,
-                              prefix_cache=prefix_cache, executor=executor),
+                              prefix_cache=prefix_cache,
+                              host_kv_blocks=host_kv_blocks,
+                              executor=executor),
                  ppi_device, executor_factory("ppi"))
     cpi = Engine("cpi", cfg,
                  EngineConfig(max_batched_tokens=max_batched_tokens,
@@ -130,7 +137,9 @@ def build_cronus(cfg, ppi_device, cpi_device, *, executor_factory: Callable,
                               num_kv_blocks=cpi_blocks,
                               decode_only=decode_only_cpi,
                               sched_policy=sched_policy,
-                              prefix_cache=prefix_cache, executor=executor),
+                              prefix_cache=prefix_cache,
+                              host_kv_blocks=host_kv_blocks,
+                              executor=executor),
                  cpi_device, executor_factory("cpi"))
     return CronusSystem(ppi=ppi, cpi=cpi,
                         balancer=balancer if balancer is not None

@@ -46,6 +46,7 @@ class EngineConfig:
     lazy_kv: Optional[bool] = None     # None -> policy default (fcfs: off)
     prefix_cache: bool = False         # shared-prefix KV reuse (off = seed)
     executor: str = "null"             # compute backend: null | real | paged
+    host_kv_blocks: int = 0            # host-memory cache tier (0 = off)
 
 
 class Engine:
@@ -64,7 +65,8 @@ class Engine:
         self.clock = 0.0
         self.allocator = BlockAllocator(engine_cfg.num_kv_blocks,
                                         engine_cfg.block_size,
-                                        prefix_cache=engine_cfg.prefix_cache)
+                                        prefix_cache=engine_cfg.prefix_cache,
+                                        host_blocks=engine_cfg.host_kv_blocks)
         self.scheduler = make_scheduler(engine_cfg.sched_policy, engine_cfg)
         self.slots: List[Optional[Request]] = [None] * engine_cfg.max_slots
         # Block-pool executors bind to the engine so attention can read
@@ -175,12 +177,14 @@ class Engine:
                     req.metrics.cached_prefix_tokens += \
                         shared - req.context_len
                     req.context_len = shared
+        # migrated decoders can carry more context than the policy's
+        # admission reservation (context covers generated tokens too) —
+        # the table must span the payload about to be injected
+        need = max(self.scheduler.admission_tokens(req), req.context_len)
         if self.allocator.owned_blocks(req.req_id):
-            self.allocator.extend_to(req.req_id,
-                                     self.scheduler.admission_tokens(req))
+            self.allocator.extend_to(req.req_id, need)
         else:
-            self.allocator.allocate(req.req_id,
-                                    self.scheduler.admission_tokens(req))
+            self.allocator.allocate(req.req_id, need)
         req.slot = slot
         self.slots[slot] = req
         self.executor.reset_slot(slot)
@@ -316,6 +320,15 @@ class Engine:
             # its next token (the planner preempted victims so this fits)
             for r in decode_reqs:
                 self.allocator.extend_to(r.req_id, r.total_ctx)
+
+        # host-tier PCIe traffic this iteration generated (placements
+        # promoting demoted chains, allocations demoting cold ones) is
+        # DMA overlapped with compute, like the link transfers above
+        if self.allocator.host_blocks:
+            moved = self.allocator.take_pending_host_transfer_tokens()
+            if moved:
+                transfer_time = max(transfer_time,
+                                    self.device.host_kv_time(moved))
 
         # Executed chunk lengths clamp to prefill_remaining as it stands
         # AFTER placement: a prefix-cache hit at _place advanced
@@ -504,6 +517,67 @@ class Engine:
             self.allocator.free(r.req_id)      # no-op when nothing is owned
             displaced.append(r)
         return displaced
+
+    def migrate_requests(self) -> List[Request]:
+        """Evict everything this engine holds, *keeping KV where it can
+        move* (endpoint detach with migration): residents leave with their
+        cache contents extracted into a portable ``kv_payload`` (decoders
+        carry ``total_ctx - 1`` tokens, mid-prefill requests their partial
+        context) instead of recomputing; queued requests that already
+        carry a payload keep it. The runtime routes the displaced requests
+        to endpoints that can ingest the KV — and strips the payload back
+        to the recompute path when none can. Afterwards the engine holds
+        no work and its allocator invariants are clean."""
+        displaced: List[Request] = []
+        for r in list(self.slots):
+            if r is not None:
+                displaced.append(self._extract_resident(r))
+        while self.queue:
+            r = self.queue.popleft()
+            self.allocator.free(r.req_id)   # no-op when nothing is owned
+            if r.kv_payload is None:
+                # plain queued arrival: nothing engine-local to preserve
+                r.first_token = None
+                r.partial_len = 0
+                r.context_len = 0
+                r.ready_time = r.arrival
+            # else: a delivered handoff's payload is portable data — keep
+            # its context/partial/first-token exactly as the PPI left them
+            r.local_payload = False
+            r.state = ReqState.WAITING
+            displaced.append(r)
+        return displaced
+
+    def _extract_resident(self, r: Request) -> Request:
+        """Pull one resident out with its KV as a portable payload (or
+        stripped for recompute when the cache holds nothing yet)."""
+        if r.state is ReqState.TRANSFER:
+            # the un-ingested payload is already portable: keep it
+            r.ready_time = max(r.ready_time, self.clock)
+        else:
+            # decoders: KV covers total_ctx - 1 (the newest token's KV is
+            # written by its own decode step); prefills: context_len
+            k = r.total_ctx - 1 if r.generated else r.context_len
+            if k > 0:
+                r.kv_payload = self.executor.extract_kv(r.slot, k)
+                r.context_len = k
+                r.partial_len = 0       # the whole payload crosses the wire
+                if r.generated:
+                    r.first_token = None    # already emitted — never re-emit
+                r.ready_time = max(r.ready_time, self.clock)
+            else:
+                r.kv_payload = None
+                r.first_token = None
+                r.partial_len = 0
+                r.context_len = 0
+                r.ready_time = r.arrival
+        r.local_payload = False
+        self.allocator.free(r.req_id)
+        self.executor.reset_slot(r.slot)
+        self.slots[r.slot] = None
+        r.slot = None
+        r.state = ReqState.WAITING
+        return r
 
     def _cancel(self, req: Request) -> Request:
         self.allocator.free(req.req_id)    # no-op when nothing is owned

@@ -363,6 +363,7 @@ class PagedRealExecutor:
         self.k_pool = None              # [L, P+1, page, Kv, D]
         self.v_pool = None
         self._trash: Optional[int] = None
+        self._host_store: Dict[bytes, tuple] = {}   # chain hash -> (K, V)
 
     def compile_stats(self) -> Dict[str, int]:
         return self.buckets.compile_stats()
@@ -401,7 +402,34 @@ class PagedRealExecutor:
         assert alloc.num_blocks <= self._trash, \
             "allocator grew past the physical pool"
         alloc.on_cow = self._clone_block
+        # host-memory tier hooks: demotions copy the pool row out to host
+        # DRAM before the allocator recycles it, promotions write it back
+        alloc.on_demote = self._save_block
+        alloc.on_promote = self._restore_block
+        alloc.on_host_evict = self._drop_host
         self._allocator = alloc
+        self._host_store: Dict[bytes, tuple] = {}
+
+    def _save_block(self, blk: int, key: bytes) -> None:
+        """Allocator demotion hook: the GPU row is about to be recycled —
+        copy its K/V out to the modeled host store (fires while the row
+        is still intact, before the block returns to the free list)."""
+        self.buckets.record("host_demote", 1)
+        self._host_store[key] = (np.asarray(self.k_pool[:, blk]),
+                                 np.asarray(self.v_pool[:, blk]))
+
+    def _restore_block(self, blk: int, key: bytes) -> None:
+        """Allocator promotion hook: a host-resident chain got a prefix
+        hit — write its K/V back into the newly assigned pool row."""
+        k, v = self._host_store.pop(key)
+        self.buckets.record("host_promote", 1)
+        self.k_pool = self.k_pool.at[:, blk].set(jnp.asarray(k))
+        self.v_pool = self.v_pool.at[:, blk].set(jnp.asarray(v))
+
+    def _drop_host(self, key: bytes) -> None:
+        """Allocator host-eviction hook (capacity pressure, or the GPU
+        re-registered the same chain): forget the stored row."""
+        self._host_store.pop(key, None)
 
     def _alloc(self):
         """The engine's CURRENT allocator (tests swap allocators to model

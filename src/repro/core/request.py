@@ -33,6 +33,7 @@ class Request:
     kv_payload: Any = None                # extracted cache slices in transit
     first_token: Optional[int] = None     # produced by PPI if partial == full
     local_payload: bool = False           # payload stays on-device (offload)
+    kv_src: Optional[str] = None          # pool the payload was extracted from
 
     # engine-local state
     ready_time: float = 0.0               # earliest time this engine may run it

@@ -1,3 +1,5 @@
+"""Paged-KV cache layer: block accounting and cluster-scale KV movement."""
 from repro.kvcache.allocator import BlockAllocator
+from repro.kvcache.transfer import TransferEngine, TransferHandle
 
-__all__ = ["BlockAllocator"]
+__all__ = ["BlockAllocator", "TransferEngine", "TransferHandle"]

@@ -22,6 +22,20 @@ bit-identical to the plain allocator):
   * cached refcount-0 blocks are *evictable*: ``num_free`` counts them,
     which keeps the free-block signal the Balancer reads honest (a cached
     block never blocks admission — allocation evicts LRU-first on demand).
+
+Host-memory tier (``host_blocks > 0``, requires ``prefix_cache``): when a
+cached refcount-0 block is evicted to satisfy an allocation, its indexed
+content is *demoted* to a modeled CPU-DRAM tier (an LRU of up to
+``host_blocks`` entries keyed by chain hash) instead of being dropped.
+The prefix walk crosses tiers transparently, so ``lookup_prefix`` still
+sees demoted chains and ``share_blocks`` *promotes* matched host entries
+back into GPU blocks on placement. Tier moves are charged as PCIe traffic:
+the allocator accumulates moved tokens and the engine drains them via
+:meth:`take_pending_host_transfer_tokens` into the iteration's overlap
+budget (``DeviceModel.host_kv_time``). ``num_free`` never counts host
+entries — the Balancer's Algorithm-1 signal stays a GPU-pool truth — and
+executors with physical pools mirror the moves through the ``on_demote``
+/ ``on_promote`` / ``on_host_evict`` hooks.
 """
 from __future__ import annotations
 
@@ -48,11 +62,19 @@ def _common_prefix_len(a: np.ndarray, b: np.ndarray) -> int:
 
 
 class BlockAllocator:
+    """Paged-KV block accounting for one engine: free list, per-request
+    block tables, optional refcounted prefix cache, and an optional
+    host-memory ("CPU") tier that demoted cache blocks spill into."""
+
     def __init__(self, num_blocks: int, block_size: int,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, host_blocks: int = 0):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.prefix_cache = prefix_cache
+        self.host_blocks = int(host_blocks)
+        if self.host_blocks and not prefix_cache:
+            raise ValueError("host_blocks requires prefix_cache: the host "
+                             "tier holds demoted prefix-cache content")
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._owned: Dict[str, List[int]] = {}
         # Physical-copy hook for executors that keep real KV behind these
@@ -70,11 +92,28 @@ class BlockAllocator:
         self._block_parent: Dict[int, bytes] = {}
         self._block_tokens: Dict[int, np.ndarray] = {}
         self._children: Dict[bytes, List[int]] = {}
+        # --- host-memory tier (empty when host_blocks == 0) -------------
+        # chain hash -> (parent chain hash, block tokens); LRU order.
+        # Disjoint from the GPU index by invariant: a hash lives in
+        # ``_hash_to_block`` or ``_host``, never both.
+        self._host: "OrderedDict[bytes, tuple]" = OrderedDict()
+        # Physical-move hooks, mirroring ``on_cow``: ``on_demote(block,
+        # key)`` fires while the demoted block's pool row is still intact
+        # (save it host-side), ``on_promote(block, key)`` after a GPU
+        # block was taken for the promoted content (restore the row), and
+        # ``on_host_evict(key)`` when a host entry is dropped.
+        self.on_demote = None
+        self.on_promote = None
+        self.on_host_evict = None
+        self._pending_host_tokens = 0   # PCIe traffic awaiting charge
         # counters (benchmark / metrics surface)
         self.n_prefix_hits = 0      # share_blocks calls that reused tokens
         self.n_tokens_reused = 0    # prompt tokens whose prefill was skipped
         self.n_cow_copies = 0       # partial-block divergence copies
         self.n_evictions = 0        # cached blocks reclaimed for allocation
+        self.n_demotions = 0        # blocks spilled GPU -> host tier
+        self.n_promotions = 0       # host entries pulled back into GPU blocks
+        self.n_host_evictions = 0   # host entries dropped (capacity/collision)
 
     @property
     def num_free(self) -> int:
@@ -84,9 +123,11 @@ class BlockAllocator:
         return len(self._free) + len(self._lru)
 
     def blocks_needed(self, n_tokens: int) -> int:
+        """Blocks covering ``n_tokens`` at this block size."""
         return math.ceil(n_tokens / self.block_size)
 
     def can_allocate(self, n_tokens: int) -> bool:
+        """Whether a fresh ``n_tokens`` allocation would fit right now."""
         return self.blocks_needed(n_tokens) <= self.num_free
 
     # ------------------------------------------------------------------
@@ -95,11 +136,65 @@ class BlockAllocator:
     def _evict_lru(self, exclude: Optional[int] = None) -> None:
         for b in self._lru:
             if b != exclude:
-                self._deindex(b)
+                if self.host_blocks:
+                    self._demote(b)
+                else:
+                    self._deindex(b)
                 self._free.append(b)
                 self.n_evictions += 1
                 return
         raise MemoryError("no evictable cached block")
+
+    def _demote(self, b: int) -> None:
+        """Spill an evicted cache block's content to the host tier. Partial
+        tail blocks are dropped instead: the cross-tier walk matches full
+        blocks only, so a demoted partial could never be promoted back."""
+        h = self._block_hash[b]
+        parent = self._block_parent[b]
+        tokens = self._block_tokens[b]
+        self._deindex(b)
+        if len(tokens) < self.block_size:
+            return
+        self._host[h] = (parent, tokens)          # MRU end
+        self.n_demotions += 1
+        self._pending_host_tokens += len(tokens)
+        if self.on_demote is not None:
+            self.on_demote(b, h)
+        while len(self._host) > self.host_blocks:
+            k, _ = self._host.popitem(last=False)  # oldest entry
+            self.n_host_evictions += 1
+            if self.on_host_evict is not None:
+                self.on_host_evict(k)
+
+    def _promote(self, key: bytes) -> int:
+        """Pull one host-tier entry back into a freshly taken GPU block
+        (caller guarantees ``num_free >= 1``) and re-register it in the
+        prefix index at refcount 1."""
+        parent, tokens = self._host.pop(key)
+        blk = self._take_block()
+        self._block_hash[blk] = key
+        self._hash_to_block[key] = blk
+        self._block_parent[blk] = parent
+        self._block_tokens[blk] = tokens
+        self._children.setdefault(parent, []).append(blk)
+        self._ref[blk] = 1
+        self.n_promotions += 1
+        self._pending_host_tokens += len(tokens)
+        if self.on_promote is not None:
+            self.on_promote(blk, key)
+        return blk
+
+    def take_pending_host_transfer_tokens(self) -> int:
+        """Drain the tokens moved across PCIe (demotions + promotions)
+        since the last call — the engine charges them into the current
+        iteration's transfer-overlap budget."""
+        n, self._pending_host_tokens = self._pending_host_tokens, 0
+        return n
+
+    @property
+    def host_resident_blocks(self) -> int:
+        """Entries currently held in the host-memory tier."""
+        return len(self._host)
 
     def _deindex(self, b: int) -> None:
         """Drop a block from the prefix index (eviction). Indexed
@@ -121,6 +216,8 @@ class BlockAllocator:
         return self._free.pop()
 
     def allocate(self, req_id: str, n_tokens: int) -> List[int]:
+        """Give ``req_id`` fresh blocks for ``n_tokens`` (MemoryError if
+        the pool, including reclaimable cache, cannot cover it)."""
         need = self.blocks_needed(n_tokens)
         if need > self.num_free:
             raise MemoryError(f"out of KV blocks: need {need}, free {self.num_free}")
@@ -136,6 +233,7 @@ class BlockAllocator:
         return len(self._owned.get(req_id, ()))
 
     def can_extend_to(self, req_id: str, n_tokens: int) -> bool:
+        """Whether growing ``req_id`` to ``n_tokens`` total would fit."""
         return (self.blocks_needed(n_tokens) - self.owned_blocks(req_id)
                 <= self.num_free)
 
@@ -200,6 +298,13 @@ class BlockAllocator:
                 continue            # already indexed (shared prefix block)
             if h in self._hash_to_block:
                 continue            # duplicate content; existing entry wins
+            if h in self._host:
+                # the content just re-materialized on the GPU: keep the
+                # tiers disjoint — the fresh GPU copy is authoritative
+                del self._host[h]
+                self.n_host_evictions += 1
+                if self.on_host_evict is not None:
+                    self.on_host_evict(h)
             self._block_hash[blk] = h
             self._hash_to_block[h] = blk
             self._block_parent[blk] = parent
@@ -209,35 +314,37 @@ class BlockAllocator:
     def _match_prefix(self, tokens: np.ndarray, max_tokens: Optional[int]):
         """The single source of truth both ``lookup_prefix`` (read-only
         promise) and ``share_blocks`` (placement) use: walk the full-block
-        hash chain, then find the best common prefix into one cached block
-        past the divergence point. Returns ``(full_blocks, n_full, src,
-        src_len)`` — matched block ids, tokens they cover, and the CoW
-        source block (with its matched token count), if any."""
+        hash chain — crossing into the host tier wherever a link was
+        demoted — then find the best common prefix into one GPU-cached
+        block past the divergence point. Returns ``(keys, n_full, src,
+        src_len)`` — the matched chain hashes (each resolvable in exactly
+        one tier), the tokens they cover, and the CoW source block (with
+        its matched token count), if any."""
         tokens = np.asarray(tokens, np.int32)
         limit = len(tokens) if max_tokens is None else min(max_tokens,
                                                            len(tokens))
-        full: List[int] = []
+        keys: List[bytes] = []
         n, h = 0, b""
         while n + self.block_size <= limit:
             h2 = _chain(h, tokens[n:n + self.block_size])
-            blk = self._hash_to_block.get(h2)
-            if blk is None:
+            if h2 not in self._hash_to_block and h2 not in self._host:
                 break
-            full.append(blk)
+            keys.append(h2)
             n, h = n + self.block_size, h2
         src, src_len = None, 0
         for b in self._children.get(h, ()):
             k = _common_prefix_len(tokens[n:limit], self._block_tokens[b])
             if k > src_len:
                 src, src_len = b, k
-        return full, n, src, src_len
+        return keys, n, src, src_len
 
     def lookup_prefix(self, tokens: np.ndarray,
                       max_tokens: Optional[int] = None) -> int:
         """Tokens of ``tokens`` whose KV is reusable from the cache right
-        now: the longest full-block hash-chain match, plus the longest
-        common prefix into one cached block past it (served by CoW at
-        share time). Read-only — used by planners and affinity routers."""
+        now — either tier: the longest full-block hash-chain match (host
+        links count; they promote at share time), plus the longest common
+        prefix into one cached block past it (served by CoW at share
+        time). Read-only — used by planners and affinity routers."""
         if not self.prefix_cache:
             return 0
         _, n, _, src_len = self._match_prefix(tokens, max_tokens)
@@ -254,18 +361,32 @@ class BlockAllocator:
         if not self.prefix_cache:
             return 0
         assert not self._owned.get(req_id), "share_blocks before allocate"
-        full, n, src, src_len = self._match_prefix(tokens, max_tokens)
+        keys, n, src, src_len = self._match_prefix(tokens, max_tokens)
         table: List[int] = []
-        for blk in full:
-            if blk not in self._ref:
-                self._lru.pop(blk)                # resurrect from cache
-                self._ref[blk] = 0
-            self._ref[blk] += 1
+        n = 0
+        for key in keys:
+            # resolve each link live: a promotion below may have evicted
+            # (or itself demoted) blocks matched further along the chain
+            blk = self._hash_to_block.get(key)
+            if blk is not None:
+                if blk not in self._ref:
+                    self._lru.pop(blk)            # resurrect from cache
+                    self._ref[blk] = 0
+                self._ref[blk] += 1
+            elif key in self._host and self.num_free >= 1:
+                blk = self._promote(key)
+            else:
+                # chain broken mid-walk (host entry displaced, or no GPU
+                # block left to promote into): keep the contiguous prefix
+                src, src_len = None, 0
+                break
             table.append(blk)
+            n += self.block_size
         if src is not None and src_len > 0:
-            # partial-block divergence -> copy-on-write
+            # partial-block divergence -> copy-on-write; the promote pass
+            # can displace cached blocks, so re-check src is still indexed
             spare = self.num_free - (1 if src in self._lru else 0)
-            if spare >= 1:
+            if spare >= 1 and src in self._block_tokens:
                 cow = self._take_block(exclude=src)
                 if self.on_cow is not None:
                     self.on_cow(cow, src, src_len)
@@ -288,10 +409,49 @@ class BlockAllocator:
         shared storage, and the CoW tail was already cloned physically."""
         return self._shared.get(req_id, 0)
 
+    def adopt_prefix(self, tokens: np.ndarray, n_tokens: int) -> int:
+        """Replicate the first ``n_tokens`` of ``tokens`` into this cache
+        as refcount-0 retained blocks — the receiving half of a
+        cross-endpoint prefix fetch (the content arrived from a peer's
+        pool via the transfer engine; link cost is charged by the caller).
+        Full blocks only; links already resident (either tier) are touched
+        to MRU instead of duplicated. Returns the tokens *newly
+        materialized* here (0 when caching is off or the pool is fully
+        owned)."""
+        if not self.prefix_cache:
+            return 0
+        tokens = np.asarray(tokens, np.int32)
+        limit = min(int(n_tokens), len(tokens))
+        n, h, adopted = 0, b"", 0
+        while n + self.block_size <= limit:
+            h2 = _chain(h, tokens[n:n + self.block_size])
+            if h2 in self._hash_to_block:
+                blk = self._hash_to_block[h2]
+                if blk in self._lru:
+                    self._lru.move_to_end(blk)    # fetched prefix is hot
+            elif h2 in self._host:
+                self._host.move_to_end(h2)
+            else:
+                if self.num_free < 1:
+                    break
+                blk = self._take_block()
+                self._block_hash[blk] = h2
+                self._hash_to_block[h2] = blk
+                self._block_parent[blk] = h
+                self._block_tokens[blk] = tokens[n:n + self.block_size].copy()
+                self._children.setdefault(h, []).append(blk)
+                self._lru[blk] = None             # refcount-0, evictable
+                adopted += self.block_size
+            n, h = n + self.block_size, h2
+        return adopted
+
     def block_table(self, req_id: str) -> List[int]:
+        """The request's current block table (copy), in context order."""
         return list(self._owned.get(req_id, []))
 
     def check_invariants(self) -> None:
+        """Assert the full partition/accounting story; tests call this
+        after every scenario. Covers both tiers when a host tier is on."""
         owned = [b for bs in self._owned.values() for b in bs]
         if not self.prefix_cache:
             assert len(owned) == len(set(owned)), "double-allocated block"
@@ -323,3 +483,13 @@ class BlockAllocator:
             assert self._hash_to_block[h] == b, "index maps disagree"
             assert b in self._block_tokens and b in self._block_parent
             assert b in self._children[self._block_parent[b]]
+        # --- host-tier accounting ---------------------------------------
+        if not self.host_blocks:
+            assert not self._host, "host entries with the tier disabled"
+            return
+        assert len(self._host) <= self.host_blocks, "host tier over capacity"
+        assert not (set(self._host) & set(self._hash_to_block)), \
+            "chain hash resident in both tiers"
+        for k, (parent, toks) in self._host.items():
+            assert len(toks) == self.block_size, \
+                "partial block demoted to host tier"

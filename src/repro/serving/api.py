@@ -100,6 +100,7 @@ class ServeSpec:
     s_kv: Optional[int] = None            # real executor: KV tokens per slot
     chunk_pad: Optional[int] = None       # real executor: pad chunks (jit)
     num_kv_blocks: Optional[int] = None   # paged executor: KV pool blocks
+    host_kv_blocks: int = 0               # host-memory cache tier (0 = off)
     # open-loop arrival process for workload driving (repro.workloads):
     # "fixed:I" | "poisson:RATE" | "burst:RATE[:B[:ON]]" | "ramp:LO:HI[:P]".
     # None = closed-loop trace replay (the historical behaviour).
@@ -117,6 +118,8 @@ class ServeSpec:
     # validation
     # ------------------------------------------------------------------
     def validate(self) -> None:
+        """Refuse malformed or contradictory specs with one-line errors
+        (the full matrix is documented in docs/OPERATIONS.md)."""
         if self.arch not in ARCH_IDS:
             raise ValueError(f"unknown arch {self.arch!r}; "
                              f"choose from {ARCH_IDS}")
@@ -172,6 +175,15 @@ class ServeSpec:
                     "pool; with executor="
                     f"{self.executor!r} the pool is device-HBM-derived "
                     "(set executor='paged')")
+        if self.host_kv_blocks < 0:
+            raise ValueError("host_kv_blocks must be >= 0")
+        if self.host_kv_blocks > 0 and not (
+                self.prefix_cache or "@cache" in (self.cluster or "")):
+            raise ValueError(
+                "host_kv_blocks adds a host-memory tier *behind the "
+                "prefix cache* (demoted refcount-0 prefix blocks); it "
+                "does nothing without prefix caching — set prefix_cache "
+                "or an '@cache' node suffix")
         if self.arrival is not None:
             parse_arrival(self.arrival)   # raises ValueError on bad specs
         if self.autoscale is not None:
@@ -200,10 +212,12 @@ class ServeSpec:
     # serialization (JSON round-trip)
     # ------------------------------------------------------------------
     def to_dict(self) -> Dict:
+        """The spec as a plain JSON-ready dict."""
         return dataclasses.asdict(self)
 
     @classmethod
     def from_dict(cls, d: Dict) -> "ServeSpec":
+        """Inverse of :meth:`to_dict`; unknown keys are refused."""
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - known
         if unknown:
@@ -213,10 +227,12 @@ class ServeSpec:
 
     @classmethod
     def from_json_file(cls, path: str) -> "ServeSpec":
+        """Load a spec from a JSON file (``serve.py --spec``)."""
         with open(path) as f:
             return cls.from_dict(json.load(f))
 
     def replace(self, **changes) -> "ServeSpec":
+        """A copy with ``changes`` applied (re-validated)."""
         return dataclasses.replace(self, **changes)
 
     # ------------------------------------------------------------------
@@ -225,6 +241,8 @@ class ServeSpec:
     # ------------------------------------------------------------------
     @classmethod
     def add_cli_args(cls, ap) -> None:
+        """Generate one CLI flag per spec field (serve.py's system
+        flags; a test asserts the CLI covers every field)."""
         g = ap.add_argument_group(
             "serving spec", "system topology and policies (ServeSpec)")
         g.add_argument("--arch", default=cls._default("arch"),
@@ -281,6 +299,13 @@ class ServeSpec:
                        help="paged executor: KV pool size in blocks per "
                             "engine (default: max_slots * "
                             "ceil(s_kv / block_size))")
+        g.add_argument("--host-kv-blocks", type=int,
+                       default=cls._default("host_kv_blocks"),
+                       help="host-memory KV cache tier in blocks per "
+                            "engine: refcount-0 prefix blocks demote to "
+                            "host DRAM and promote back on a hit, PCIe "
+                            "cost charged (needs --prefix-cache or "
+                            "'@cache'; per-node override via '@host')")
         g.add_argument("--arrival", default=cls._default("arrival"),
                        metavar="PROC",
                        help="open-loop arrival process: fixed:I | "
@@ -299,6 +324,8 @@ class ServeSpec:
 
     @classmethod
     def from_cli(cls, args) -> "ServeSpec":
+        """Build a spec from parsed CLI args (inverse of
+        :meth:`add_cli_args`, with the --real back-compat sizing)."""
         executor = getattr(args, "executor", None) or (
             "real" if getattr(args, "real", False) else "null")
         # real-compute runs keep the historical CPU-scale defaults unless
@@ -315,6 +342,7 @@ class ServeSpec:
                    max_batched_tokens=args.max_batched_tokens,
                    s_kv=args.s_kv, chunk_pad=args.chunk_pad,
                    num_kv_blocks=getattr(args, "num_kv_blocks", None),
+                   host_kv_blocks=getattr(args, "host_kv_blocks", 0),
                    arrival=args.arrival, autoscale=args.autoscale,
                    inventory=args.inventory)
 
@@ -344,7 +372,8 @@ class ServeSpec:
                 max_batched_tokens=self.max_batched_tokens,
                 sched_policy=self.sched_policy,
                 prefix_cache=self.prefix_cache,
-                num_kv_blocks=num_kv_blocks, executor=self.executor)
+                num_kv_blocks=num_kv_blocks,
+                host_kv_blocks=self.host_kv_blocks, executor=self.executor)
             service = InferenceService(system.endpoints, system.router,
                                        spec=self, cfg=cfg, system=system)
         else:
@@ -355,7 +384,8 @@ class ServeSpec:
                 max_batched_tokens=self.max_batched_tokens,
                 sched_policy=self.sched_policy,
                 prefix_cache=self.prefix_cache,
-                num_kv_blocks=num_kv_blocks, executor=self.executor)
+                num_kv_blocks=num_kv_blocks,
+                host_kv_blocks=self.host_kv_blocks, executor=self.executor)
             endpoints, router = self._pair_endpoints(system)
             service = InferenceService(endpoints, router, spec=self,
                                        cfg=cfg, system=system)
@@ -366,7 +396,8 @@ class ServeSpec:
             block_size=self.block_size,
             max_batched_tokens=self.max_batched_tokens,
             sched_policy=self.sched_policy, prefix_cache=self.prefix_cache,
-            num_kv_blocks=num_kv_blocks, executor=self.executor)
+            num_kv_blocks=num_kv_blocks,
+            host_kv_blocks=self.host_kv_blocks, executor=self.executor)
         if self.autoscale is not None:
             from repro.autoscale import (Autoscaler, DeviceInventory,
                                          parse_autoscale)
@@ -429,12 +460,14 @@ class ServeSpec:
             self.effective_num_kv_blocks()   # validate sizing up front
 
             def factory(role):
+                """Fresh paged executor per engine (own block pool)."""
                 # one executor per engine: each owns its own block pool,
                 # sized from EngineConfig.num_kv_blocks at attach_engine
                 return PagedRealExecutor(model, params)
             return factory
 
         def factory(role):
+            """Slot executor; the PPI keeps the paper's 2-slot cap."""
             return RealExecutor(
                 model, params,
                 max_slots=2 if role == "ppi" else spec.max_slots,
@@ -459,14 +492,17 @@ class RequestHandle:
 
     @property
     def req_id(self) -> str:
+        """The underlying request's id."""
         return self.request.req_id
 
     @property
     def done(self) -> bool:
+        """Whether the request finished (not cancelled)."""
         return self.request.state is ReqState.FINISHED
 
     @property
     def cancelled(self) -> bool:
+        """Whether the request was cancelled."""
         return self.request.metrics.cancelled
 
     @property
@@ -567,10 +603,12 @@ class InferenceService:
     # ------------------------------------------------------------------
     @property
     def endpoints(self) -> List[Endpoint]:
+        """Current cluster membership."""
         return self.runtime.endpoints
 
     @property
     def engines(self):
+        """Every engine across the current membership."""
         return self.runtime.engines
 
     @property
@@ -580,14 +618,17 @@ class InferenceService:
 
     @property
     def n_submitted(self) -> int:
+        """Requests submitted over this service's lifetime."""
         return len(self._handles)
 
     @property
     def n_cancelled(self) -> int:
+        """Requests cancelled before completion."""
         return self._n_cancelled
 
     @property
     def n_finished(self) -> int:
+        """Requests completed (including detached endpoints' retirees)."""
         return self.runtime.n_finished()
 
     @property
@@ -597,6 +638,7 @@ class InferenceService:
 
     @property
     def autoscaler(self):
+        """The attached autoscaler, or None."""
         return self._autoscaler
 
     def oldest_pending_arrival(self) -> Optional[float]:
@@ -616,12 +658,18 @@ class InferenceService:
         for eng in ep.engines:
             eng.on_token = self._on_token
 
-    def detach_endpoint(self, name: str) -> Endpoint:
-        """Remove a live endpoint: drains its residents by recompute back
-        into this service's pending queue (no request is lost; each will
-        re-route on a later tick) and folds its finished requests into
-        the fleet's metrics via ``runtime.retired``."""
-        return self.runtime.detach_endpoint(name, pending=self._pending)
+    def detach_endpoint(self, name: str, migrate: bool = True) -> Endpoint:
+        """Remove a live endpoint: its residents re-enter this service's
+        pending queue (no request is lost; each re-routes on a later
+        tick) and its finished requests fold into the fleet's metrics via
+        ``runtime.retired``. By default residents *migrate* — their
+        computed KV travels with them through the cluster
+        :class:`~repro.kvcache.TransferEngine` to any endpoint that will
+        ingest it, falling back to recompute only when none does — so
+        scale-down never pays for re-prefilling work it already paid for.
+        ``migrate=False`` forces the drain-by-recompute path."""
+        return self.runtime.detach_endpoint(name, pending=self._pending,
+                                            migrate=migrate)
 
     def attach_autoscaler(self, autoscaler) -> None:
         """Hand the scaling loop this service: ``autoscaler.on_tick`` runs
@@ -650,6 +698,8 @@ class InferenceService:
         return handle
 
     def cancel(self, handle: RequestHandle) -> bool:
+        """Cancel a submitted request wherever it lives (pending queue
+        or any endpoint); frees its slot and KV. False if already done."""
         req = handle.request
         if handle.done or handle.cancelled:
             return False

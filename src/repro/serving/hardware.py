@@ -18,6 +18,8 @@ from repro.configs.base import ModelConfig
 
 @dataclasses.dataclass(frozen=True)
 class DeviceSpec:
+    """Published capability numbers for one accelerator type."""
+
     name: str
     flops: float          # peak bf16 FLOP/s
     hbm_bw: float         # bytes/s
@@ -26,6 +28,10 @@ class DeviceSpec:
     flops_eff: float = 0.55   # achievable fraction of peak in mixed batches
     bw_eff: float = 0.75
     overhead: float = 3.0e-3  # fixed per-iteration launch/schedule overhead (s)
+    # device <-> host-DRAM bandwidth (PCIe 4.0 x16 ~ 32 GB/s for the GPUs;
+    # TPU hosts see similar PCIe attach) — the cost the host-memory KV tier
+    # pays on demote/promote
+    pcie_bw: float = 32e9
 
 
 # published specs; link = IB 100 Gb/s for GPUs, ICI/DCN for TPUs
@@ -71,14 +77,17 @@ def transfer_bytes(cfg: ModelConfig, n_tokens: int) -> float:
 
 
 def param_bytes(cfg: ModelConfig) -> float:
+    """Weight bytes at bf16."""
     return 2.0 * cfg.param_count()
 
 
 def active_param_bytes(cfg: ModelConfig) -> float:
+    """Bytes of weights touched per token (MoE: active experts only)."""
     return 2.0 * cfg.active_param_count()
 
 
 def matmul_flops_per_token(cfg: ModelConfig) -> float:
+    """Dense matmul FLOPs per token (2 * active params)."""
     return 2.0 * cfg.active_param_count()
 
 
@@ -129,13 +138,22 @@ class DeviceModel:
         return self._time(f, by)
 
     def decode_iter_time(self, decode_ctx_sum: float, n_decode: int) -> float:
+        """Seconds for one decode-only iteration."""
         return self.chunked_iter_time(0, 0, decode_ctx_sum, n_decode)
 
     def transfer_time(self, n_tokens: int) -> float:
+        """Seconds to ship n_tokens of KV across the inter-device link."""
         return transfer_bytes(self.cfg, n_tokens) / self.spec.link_bw
+
+    def host_kv_time(self, n_tokens: int) -> float:
+        """Seconds to move n_tokens of KV across PCIe (host-memory tier
+        demotions/promotions — charged by the engine, overlapped with
+        compute like link transfers)."""
+        return transfer_bytes(self.cfg, n_tokens) / self.spec.pcie_bw
 
     # capacity: how many KV blocks fit beside the weights
     def kv_block_budget(self, block_size: int, mem_frac: float = 0.9) -> int:
+        """KV blocks that fit in HBM beside the weights."""
         free = self.spec.hbm_cap * mem_frac - param_bytes(self.cfg)
         per_block = kv_bytes_per_token(self.cfg) * block_size
         if per_block <= 0:

@@ -30,14 +30,16 @@ def build_system(approach: str, cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec,
                  *, max_slots: int = 256, block_size: int = 16,
                  max_batched_tokens: int = 512, executor_factory=None,
                  sched_policy: str = "fcfs", prefix_cache: bool = False,
-                 num_kv_blocks=None, executor: str = "null"):
+                 num_kv_blocks=None, host_kv_blocks: int = 0,
+                 executor: str = "null"):
+    """Build one of the five approaches as a runnable system facade."""
     executor_factory = executor_factory or _null_factory
     hi = DeviceModel(hi_spec, cfg)
     lo = DeviceModel(lo_spec, cfg)
     kw = dict(executor_factory=executor_factory, max_slots=max_slots,
               block_size=block_size, sched_policy=sched_policy,
               prefix_cache=prefix_cache, num_kv_blocks=num_kv_blocks,
-              executor=executor)
+              host_kv_blocks=host_kv_blocks, executor=executor)
     if approach == "cronus":
         bal = Balancer(profile_prefill(lo), profile_chunked(hi))
         return build_cronus(cfg, lo, hi, balancer=bal,
@@ -57,12 +59,14 @@ def build_system(approach: str, cfg, hi_spec: DeviceSpec, lo_spec: DeviceSpec,
 
 def run_approach(approach: str, cfg, hi_spec, lo_spec,
                  requests: List[Request], **kw) -> Dict[str, float]:
+    """Build an approach, replay a trace, return aggregate metrics."""
     system = build_system(approach, cfg, hi_spec, lo_spec, **kw)
     return system.run(Trace(requests).fresh())
 
 
 def compare_all(cfg, hi_spec, lo_spec, requests,
                 approaches=APPROACHES, **kw) -> Dict[str, Dict[str, float]]:
+    """Metrics for every approach on the same (fresh) trace."""
     return {a: run_approach(a, cfg, hi_spec, lo_spec, requests, **kw)
             for a in approaches}
 

@@ -71,6 +71,7 @@ class Trace(List[Request]):
 
 
 def synth_lengths(n: int, mean: float, sigma: float, rng, lo: int, hi: int):
+    """Clipped log-normal lengths with mean ``mean``."""
     mu = np.log(mean) - sigma ** 2 / 2.0    # log-normal with E[X]=mean
     return np.clip(rng.lognormal(mu, sigma, n).astype(int), lo, hi)
 

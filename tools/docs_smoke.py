@@ -1,0 +1,106 @@
+"""Docs-smoke gate: every fenced ``repro.launch.serve`` command in the
+README and ``docs/`` must actually run.
+
+Extraction rules:
+
+* only ```` ```bash ````-fenced blocks are scanned;
+* backslash-continued lines are joined into one command;
+* a command participates iff it invokes ``repro.launch.serve`` (other
+  fenced commands — benchmarks, pytest, examples — have their own CI
+  steps and stay untouched);
+* each command gets quick-scale overrides appended (argparse last-wins,
+  so ``--n-requests 12 --scale 0.05`` shrink any documented run to CI
+  size without editing the docs).
+
+A command that exits non-zero fails the gate with its output, so a
+serving-API change that breaks a documented invocation fails here, not
+on a reader's machine.
+
+Run: ``PYTHONPATH=src python tools/docs_smoke.py [--list] [FILES...]``
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import shlex
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/OPERATIONS.md"]
+QUICK_OVERRIDES = ["--n-requests", "12", "--scale", "0.05"]
+
+_FENCE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+
+
+def extract_commands(text: str) -> list:
+    """Fenced-bash ``repro.launch.serve`` commands, continuations joined,
+    in document order."""
+    cmds = []
+    for block in _FENCE.findall(text):
+        joined = re.sub(r"\\\n\s*", " ", block)
+        for line in joined.splitlines():
+            line = line.strip()
+            if line.startswith("#") or "repro.launch.serve" not in line:
+                continue
+            cmds.append(line)
+    return cmds
+
+
+def quick_command(cmd: str) -> list:
+    """Split one documented command line into argv + quick overrides.
+
+    ``--dump-spec`` runs exit before serving, and ``--dump-spec -``
+    writes to stdout, so those keep their own (already instant) shape.
+    """
+    argv = shlex.split(cmd)
+    # drop leading VAR=value env assignments (the docs spell out
+    # PYTHONPATH=src; the runner injects it for every command)
+    while argv and re.match(r"^\w+=", argv[0]):
+        argv.pop(0)
+    if "--dump-spec" in argv:
+        return argv
+    return argv + QUICK_OVERRIDES
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=None,
+                    help="markdown files to scan (default: README + docs/)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the extracted commands without running")
+    args = ap.parse_args()
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, [os.path.join(REPO, "src"), env.get("PYTHONPATH")]))
+
+    failures = 0
+    total = 0
+    for rel in (args.files or DEFAULT_FILES):
+        path = os.path.join(REPO, rel)
+        with open(path) as f:
+            cmds = extract_commands(f.read())
+        for cmd in cmds:
+            total += 1
+            argv = quick_command(cmd)
+            if args.list:
+                print(f"{rel}: {' '.join(argv)}")
+                continue
+            print(f"[docs-smoke] {rel}: {cmd}", flush=True)
+            # tmp files referenced by round-trip examples live in cwd
+            proc = subprocess.run(argv, env=env, cwd=REPO,
+                                  capture_output=True, text=True)
+            if proc.returncode != 0:
+                failures += 1
+                print(f"FAILED (exit {proc.returncode}):\n{proc.stdout}"
+                      f"\n{proc.stderr}", file=sys.stderr)
+    if not args.list:
+        print(f"[docs-smoke] {total - failures}/{total} documented "
+              f"commands ran clean")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
