@@ -19,7 +19,8 @@ from repro.cluster.router import (LeastLoadedRouter, PrefixAffinityRouter,
 from repro.cluster.runtime import (ClusterRuntime, Endpoint, EndpointStats,
                                    WorkerEndpoint)
 from repro.cluster.topology import (ClusterSpec, ClusterSystem, NodeSpec,
-                                    build_cluster, parse_cluster_spec)
+                                    build_cluster, canonical_cluster_spec,
+                                    parse_cluster_spec)
 
 __all__ = [
     "ClusterRuntime", "Endpoint", "EndpointStats", "WorkerEndpoint",
@@ -27,5 +28,5 @@ __all__ = [
     "Router", "RoundRobinRouter", "LeastLoadedRouter",
     "SessionAffinityRouter", "PrefixAffinityRouter", "make_router",
     "ClusterSpec", "NodeSpec", "ClusterSystem", "build_cluster",
-    "parse_cluster_spec",
+    "parse_cluster_spec", "canonical_cluster_spec",
 ]

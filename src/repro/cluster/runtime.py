@@ -30,7 +30,7 @@ import dataclasses
 import heapq
 import itertools
 from collections import deque
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -239,6 +239,10 @@ class ClusterRuntime:
         # and the n_finished termination condition never lose them
         self.retired: List[Request] = []
         self._draining: set = set()   # endpoint names closed to routing
+        # per-endpoint dispatch tally (routed submits + KV deliveries),
+        # surfaced by the opt-in utilization breakdown; survives detach so
+        # a departed endpoint's share of the load stays attributed
+        self.dispatched: Dict[str, int] = {}
         # every cross-pool KV move (PPI->CPI handoff, detach migration,
         # prefix fetch) goes through the one cluster transfer engine
         self.transfers = TransferEngine(self)
@@ -374,6 +378,7 @@ class ClusterRuntime:
                 continue
             ep = self.router.select(pending[0], endpoints)
             if ep is not None:
+                self._record_dispatch(ep.name)
                 ep.submit(pending.popleft(), self)
                 continue
             window = getattr(self.router, "lookahead", 0)
@@ -391,6 +396,7 @@ class ClusterRuntime:
                 break   # nothing in the window can be placed right now
             req = pending[placed_at]
             del pending[placed_at]
+            self._record_dispatch(ep.name)
             ep.submit(req, self)
 
     def _route_kv(self, req: Request, endpoints: List[Endpoint]) -> bool:
@@ -407,11 +413,15 @@ class ClusterRuntime:
         _, _, dst = min(stats,
                         key=lambda t: (t[0].queue_depth,
                                        -t[0].free_kv_blocks, t[1]))
+        self._record_dispatch(dst.name)
         self.transfers.transfer(
             req, src=req.kv_src or "detached", dst=dst.name,
             deliver=lambda r, e=dst: e.submit_kv(r, self),
             when=req.ready_time, kind="migration")
         return True
+
+    def _record_dispatch(self, name: str) -> None:
+        self.dispatched[name] = self.dispatched.get(name, 0) + 1
 
     def tick(self, pending: deque) -> bool:
         """One round of the event loop: dispatch pending arrivals, move

@@ -88,6 +88,27 @@ class NodeSpec:
             raise ValueError(f"unknown sched policy {policy!r}; "
                              f"choose from {sorted(SCHEDULERS)}")
 
+    @property
+    def suffixes(self) -> str:
+        """The node's ``@`` option suffixes in canonical order (policy,
+        then ``cache``, then ``host``)."""
+        parts = []
+        if "sched_policy" in self.options:
+            parts.append(self.options["sched_policy"])
+        if self.options.get("prefix_cache"):
+            parts.append("cache")
+        if self.options.get("host_tier"):
+            parts.append("host")
+        return "".join(f"@{p}" for p in parts)
+
+    @property
+    def spec(self) -> str:
+        """This node as a canonical DSL segment
+        (``[Nx]kind:dev[+dev][@suffixes]``); ``parse_cluster_spec`` on it
+        reproduces the node."""
+        count = f"{self.count}x" if self.count > 1 else ""
+        return f"{count}{self.kind}:{'+'.join(self.devices)}{self.suffixes}"
+
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
@@ -102,20 +123,36 @@ class ClusterSpec:
         per = {"worker": 1, "pp": 1}
         return sum(per.get(n.kind, 2) * n.count for n in self.nodes)
 
+    @property
+    def spec(self) -> str:
+        """The node list back as a DSL string (node order preserved)."""
+        return ",".join(n.spec for n in self.nodes)
+
 
 def parse_cluster_spec(text: str, router: str = "least_loaded") -> ClusterSpec:
     """Parse the compact DSL, e.g.
     ``"2xcronus:A100+A10,4xworker:A10@sarathi@cache"``. ``@`` suffixes
     stack: a scheduling-policy name picks the node's batch-composition
     policy, the literal ``cache`` enables shared-prefix KV reuse and
-    ``host`` puts a host-memory cache tier behind the GPU pool."""
+    ``host`` puts a host-memory cache tier behind the GPU pool.
+
+    Every parse error is a one-line ``ValueError`` naming the offending
+    segment and its character position in ``text``, so a typo deep in a
+    long spec is found without bisecting the string by hand."""
     nodes = []
-    for part in filter(None, (p.strip() for p in text.split(","))):
+    offset = 0
+    for i, raw in enumerate(text.split(","), start=1):
+        part = raw.strip()
+        pos = offset + (len(raw) - len(raw.lstrip()))
+        offset += len(raw) + 1          # +1 for the consumed comma
+        if not part:
+            continue
+        where = f"segment {i} at char {pos} ({part!r})"
         m = _NODE_RE.match(part)
         if m is None:
-            raise ValueError(f"bad node spec {part!r} (expected "
+            raise ValueError(f"bad node spec in {where}: expected "
                              "[<count>x]<kind>:<dev>[+<dev>][@<policy>]"
-                             "[@cache][@host])")
+                             "[@cache][@host]")
         count, kind, devs, suffixes = m.groups()
         options: Dict = {}
         for suffix in filter(None, (suffixes or "").split("@")):
@@ -127,13 +164,49 @@ def parse_cluster_spec(text: str, router: str = "least_loaded") -> ClusterSpec:
                 options["sched_policy"] = suffix
             else:
                 raise ValueError(
-                    f"unknown node suffix @{suffix} in {part!r}; expected "
-                    f"'cache', 'host' or a policy from {sorted(SCHEDULERS)}")
-        nodes.append(NodeSpec(kind=kind, devices=tuple(devs.split("+")),
-                              count=int(count or 1), options=options))
+                    f"bad node spec in {where}: unknown suffix @{suffix} — "
+                    f"expected 'cache', 'host' or a policy from "
+                    f"{sorted(SCHEDULERS)}")
+        try:
+            nodes.append(NodeSpec(kind=kind, devices=tuple(devs.split("+")),
+                                  count=int(count or 1), options=options))
+        except ValueError as e:
+            raise ValueError(f"bad node spec in {where}: {e}") from None
     if not nodes:
         raise ValueError(f"empty cluster spec {text!r}")
     return ClusterSpec(nodes=tuple(nodes), router=router)
+
+
+def canonical_cluster_spec(spec: Union["ClusterSpec", str]) -> str:
+    """One canonical DSL string per *isomorphic* topology.
+
+    Two specs that materialise the same endpoint multiset — regardless of
+    node order, count grouping (``"worker:A10,worker:A10"`` vs
+    ``"2xworker:A10"``) or suffix spelling order (``@cache@sarathi`` vs
+    ``@sarathi@cache``) — canonicalise to the same string: nodes are
+    expanded, grouped by (kind, devices, options) and re-emitted sorted.
+    The auto-topology planner keys its search-space dedupe and its
+    evaluation memo on this string, so a layout is never measured twice
+    under different spellings. Only DSL-expressible options participate
+    (programmatic ``NodeSpec.options`` keys like ``queue_cap`` are not
+    spellable and raise on round-trip)."""
+    if isinstance(spec, str):
+        spec = parse_cluster_spec(spec)
+    groups: Dict[Tuple, int] = {}
+    for node in spec.nodes:
+        key = (node.kind, node.devices,
+               tuple(sorted(node.options.items())))
+        groups[key] = groups.get(key, 0) + node.count
+    merged = [NodeSpec(kind=k, devices=d, count=n, options=dict(o))
+              for (k, d, o), n in groups.items()]
+    merged.sort(key=lambda x: (x.kind, x.devices, x.suffixes))
+    text = ",".join(n.spec for n in merged)
+    reparsed = parse_cluster_spec(text)
+    if {(n.kind, n.devices, tuple(sorted(n.options.items()))): n.count
+            for n in reparsed.nodes} != groups:
+        raise ValueError(f"cluster spec does not round-trip through the "
+                         f"DSL (programmatic node options?): {text!r}")
+    return text
 
 
 # ---------------------------------------------------------------------------

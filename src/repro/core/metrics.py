@@ -80,11 +80,16 @@ def slo_attainment(reqs: List[RequestMetrics], ttft_slo: float,
 def aggregate(reqs: List[RequestMetrics],
               ttft_slo: Optional[float] = None,
               tbt_slo: Optional[float] = None,
-              queueing: bool = False) -> Dict[str, float]:
+              queueing: bool = False,
+              utilization: Optional[Dict[str, Dict[str, float]]] = None
+              ) -> Dict[str, float]:
     """Fleet QoE summary. Passing both SLOs adds a ``goodput`` key;
     ``queueing=True`` (requested only by the open-loop driver) adds the
-    queueing/service split of TTFT. The default call returns exactly the
-    seed's dict, so existing run metrics stay bit-identical."""
+    queueing/service split of TTFT. ``utilization`` attaches a prebuilt
+    per-endpoint breakdown (busy_frac, queued-age max, dispatched count —
+    see ``InferenceService.metrics(utilization=True)``) under one
+    ``"utilization"`` key. All opt-in: the default call returns exactly
+    the seed's dict, so existing run metrics stay bit-identical."""
     done = [r for r in reqs if r.finish_time is not None and not r.cancelled]
     n_cancelled = sum(1 for r in reqs if r.cancelled)
     if not done:
@@ -97,6 +102,8 @@ def aggregate(reqs: List[RequestMetrics],
                        ttft_service_p99=float("nan"))
         if ttft_slo is not None and tbt_slo is not None:
             out["goodput"] = 0.0 if reqs else float("nan")
+        if utilization is not None:
+            out["utilization"] = utilization
         return out
     t0 = min(r.arrival for r in done)
     t1 = max(r.finish_time for r in done)
@@ -140,4 +147,6 @@ def aggregate(reqs: List[RequestMetrics],
         out["ttft_service_p99"] = percentile(svc, 99)
     if ttft_slo is not None and tbt_slo is not None:
         out["goodput"] = slo_attainment(reqs, ttft_slo, tbt_slo)
+    if utilization is not None:
+        out["utilization"] = utilization
     return out

@@ -235,6 +235,35 @@ class ServeSpec:
         """A copy with ``changes`` applied (re-validated)."""
         return dataclasses.replace(self, **changes)
 
+    @classmethod
+    def from_plan(cls, plan, rank: int = 0, rate: Optional[float] = None,
+                  **overrides) -> "ServeSpec":
+        """A spec that serves a planner recommendation
+        (:class:`repro.autotopo.PlanResult` or its ``to_dict()`` form):
+        the ranked candidate's canonical cluster + router, the probe-time
+        spec knobs (``spec_kw``), and the planned workload's arrival
+        process at ``rate`` (default: the candidate's measured capacity)
+        — so ``serve.py --plan ... --serve-best`` runs the deployment
+        under exactly the conditions the planner scored it at.
+        ``overrides`` win over everything."""
+        from repro.autotopo import parse_workload
+        d = plan.to_dict() if hasattr(plan, "to_dict") else plan
+        ranked = d.get("ranked", [])
+        if not ranked:
+            raise ValueError("cannot build a spec from an empty plan")
+        if not 0 <= rank < len(ranked):
+            raise ValueError(f"plan has {len(ranked)} ranked candidates; "
+                             f"rank {rank} is out of range")
+        best = ranked[rank]
+        if rate is None:
+            rate = best["capacity_qps"]
+        workload = parse_workload(d["workload"])
+        kw = dict(d.get("spec_kw", {}))
+        kw.update(cluster=best["cluster"], router=best["router"],
+                  arrival=workload.arrival_spec(rate) if rate > 0 else None)
+        kw.update(overrides)
+        return cls(**kw)
+
     # ------------------------------------------------------------------
     # argparse round-trip (serve.py's system flags live HERE so the CLI
     # can never drift from the spec — see tests/test_api.py)
@@ -765,18 +794,36 @@ class InferenceService:
 
     def metrics(self, ttft_slo: Optional[float] = None,
                 tbt_slo: Optional[float] = None,
-                queueing: bool = False) -> Dict[str, float]:
+                queueing: bool = False,
+                utilization: bool = False) -> Dict[str, float]:
         """Fleet QoE aggregate over everything terminal so far. Finished
         requests feed throughput/latency; cancelled ones only the
         ``cancelled`` count (they never enter throughput aggregates).
         ``queueing=True`` (the open-loop driver's view) adds the
-        queueing/service split of TTFT."""
+        queueing/service split of TTFT. ``utilization=True`` adds a
+        per-endpoint breakdown (trailing-window ``busy_frac``, max queued
+        age, router ``dispatched`` count, ``completed`` count) under one
+        ``"utilization"`` key — how planner probes attribute a miss to
+        the endpoint that caused it. Both opt-in: the default dict stays
+        byte-identical."""
         ms = [r.metrics for ep in self.runtime.endpoints
               for r in ep.finished()]
         ms += [r.metrics for r in self.runtime.retired]
         ms += [h.request.metrics for h in self._handles.values()
                if h.request.metrics.cancelled]
-        return aggregate(ms, ttft_slo, tbt_slo, queueing=queueing)
+        util = None
+        if utilization:
+            util = {}
+            for ep in self.runtime.endpoints:
+                s = ep.stats()
+                util[ep.name] = {
+                    "busy_frac": s.busy_frac,
+                    "oldest_queued_age": s.oldest_queued_age,
+                    "dispatched": self.runtime.dispatched.get(ep.name, 0),
+                    "completed": ep.n_finished(),
+                }
+        return aggregate(ms, ttft_slo, tbt_slo, queueing=queueing,
+                         utilization=util)
 
     # ------------------------------------------------------------------
     # the legacy batch surface

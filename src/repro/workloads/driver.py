@@ -83,11 +83,14 @@ class OpenLoopDriver:
         return self.service.drain(max_steps)
 
     def metrics(self, ttft_slo: Optional[float] = None,
-                tbt_slo: Optional[float] = None) -> Dict[str, float]:
+                tbt_slo: Optional[float] = None,
+                utilization: bool = False) -> Dict[str, float]:
         """Aggregate metrics with the open-loop-only queueing keys
         (``queueing_p50`` / ``queueing_p99`` / ``ttft_service_p99``) and,
-        when both SLOs are given, ``goodput``."""
-        return self.service.metrics(ttft_slo, tbt_slo, queueing=True)
+        when both SLOs are given, ``goodput``. ``utilization=True``
+        passes through the per-endpoint breakdown."""
+        return self.service.metrics(ttft_slo, tbt_slo, queueing=True,
+                                    utilization=utilization)
 
     @property
     def n_submitted(self) -> int:

@@ -22,7 +22,7 @@ the same way — benchmarks pass ``ServeSpec(...).build`` and a
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.metrics import slo_attainment
 from repro.core.request import Request
@@ -41,12 +41,20 @@ def open_loop_measure(make_service: Callable[[], object],
                       make_requests: Callable[[float], Sequence[Request]],
                       rate: float, *,
                       ttft_slo: float = DEFAULT_TTFT_SLO,
-                      tbt_slo: float = DEFAULT_TBT_SLO) -> Dict[str, float]:
+                      tbt_slo: float = DEFAULT_TBT_SLO,
+                      seed: Optional[int] = None) -> Dict[str, float]:
     """One curve point: build a fresh service, drive ``make_requests(rate)``
     open-loop, and return the aggregate with queueing keys, ``goodput``
-    (unfinished submissions count as misses) and ``rate``."""
+    (unfinished submissions count as misses) and ``rate``.
+
+    ``seed`` pins probe construction: when given, the trace factory is
+    called as ``make_requests(rate, seed)`` so the same (rate, seed) pair
+    builds the same request stream in every process — the determinism the
+    auto-topology planner's memo relies on. ``None`` keeps the one-arg
+    back-compat call."""
     service = make_service()
-    reqs = list(make_requests(rate))
+    reqs = list(make_requests(rate) if seed is None
+                else make_requests(rate, seed))
     driver = OpenLoopDriver(service)
     driver.run(reqs)
     m = driver.metrics()
@@ -62,10 +70,11 @@ def rate_sweep(make_service: Callable[[], object],
                make_requests: Callable[[float], Sequence[Request]],
                rates: Sequence[float], *,
                ttft_slo: float = DEFAULT_TTFT_SLO,
-               tbt_slo: float = DEFAULT_TBT_SLO) -> List[Dict[str, float]]:
+               tbt_slo: float = DEFAULT_TBT_SLO,
+               seed: Optional[int] = None) -> List[Dict[str, float]]:
     """Latency-vs-QPS curve: one :func:`open_loop_measure` row per rate."""
     return [open_loop_measure(make_service, make_requests, r,
-                              ttft_slo=ttft_slo, tbt_slo=tbt_slo)
+                              ttft_slo=ttft_slo, tbt_slo=tbt_slo, seed=seed)
             for r in rates]
 
 
@@ -133,12 +142,15 @@ def find_capacity(make_service: Callable[[], object],
                   ttft_slo: float = DEFAULT_TTFT_SLO,
                   tbt_slo: float = DEFAULT_TBT_SLO,
                   rel_tol: float = 0.05,
-                  max_iters: int = 12) -> CapacityResult:
+                  max_iters: int = 12,
+                  seed: Optional[int] = None) -> CapacityResult:
     """SLO-sustainable capacity of one system: :func:`capacity_search`
-    with each probe a full open-loop run at that rate."""
+    with each probe a full open-loop run at that rate. ``seed`` pins
+    probe construction (see :func:`open_loop_measure`) so the same
+    search on the same system is bit-reproducible."""
     def eval_goodput(rate: float) -> float:
         return open_loop_measure(make_service, make_requests, rate,
                                  ttft_slo=ttft_slo,
-                                 tbt_slo=tbt_slo)["goodput"]
+                                 tbt_slo=tbt_slo, seed=seed)["goodput"]
     return capacity_search(eval_goodput, lo, hi, target=target,
                            rel_tol=rel_tol, max_iters=max_iters)

@@ -1,0 +1,379 @@
+"""Auto-topology planner: workload-spec round-trips, DSL
+canonicalization, search-space enumeration + pruning, planner
+determinism, the persistent evaluation memo (resume re-probes nothing),
+ServeSpec.from_plan, seeded capacity-probe reproducibility, the
+FLOPS-prior-vs-measured capacity tolerance, inventory edge cases, and
+the opt-in per-endpoint utilization breakdown."""
+import json
+
+import pytest
+
+from repro.autoscale import DeviceInventory, EndpointTemplate, UNIT_COST, \
+    heuristic_capacity_qps
+from repro.autotopo import (Candidate, EvalMemo, TopologyPlanner,
+                            WorkloadSpec, enumerate_layouts, hand_baselines,
+                            layout_cost_rate, node_templates, parse_workload,
+                            plan_topology, router_choices, suffix_variants)
+from repro.cluster import canonical_cluster_spec, parse_cluster_spec
+from repro.serving.api import ServeSpec
+from repro.serving.trace import make_trace
+from repro.workloads import find_capacity, open_loop_measure
+
+# cheap probe workload: 12 tiny requests per open-loop run — enough to
+# exercise every planner code path in milliseconds per probe (capacity
+# numbers are meaningless at this scale; determinism/plumbing tests
+# don't read them)
+QUICK = WorkloadSpec(n_requests=12, scale=0.05, target=0.8)
+RACK = "A100:1,A10:1"
+
+
+# ---------------------------------------------------------------------------
+# WorkloadSpec
+# ---------------------------------------------------------------------------
+
+def test_workload_spec_round_trip():
+    assert WorkloadSpec().spec == "azure:poisson"
+    w = WorkloadSpec(trace="shared_prefix", arrival="burst", n_requests=40,
+                     seed=3, scale=0.5, ttft_slo=2.0, tbt_slo=0.1,
+                     target=0.8)
+    assert parse_workload(w.spec) == w
+    assert parse_workload(w) is w       # pass-through
+
+
+def test_workload_spec_refusals():
+    for bad in ("", "azure", "klingon:poisson", "azure:quantum",
+                "azure:poisson:bogus=1", "azure:poisson:n=abc",
+                "azure:poisson:n"):
+        with pytest.raises(ValueError):
+            parse_workload(bad)
+    with pytest.raises(ValueError):
+        WorkloadSpec(n_requests=0)
+    with pytest.raises(ValueError):
+        WorkloadSpec(scale=0.0)
+    with pytest.raises(ValueError):
+        WorkloadSpec(target=1.5)
+
+
+def test_workload_arrival_specs_and_trace():
+    w = WorkloadSpec(n_requests=8, scale=0.05)
+    assert w.arrival_spec(2.5) == "poisson:2.5"
+    assert WorkloadSpec(arrival="burst").arrival_spec(4.0) == "burst:4.0"
+    assert WorkloadSpec(arrival="fixed").arrival_spec(4.0) == "fixed:0.25"
+    with pytest.raises(ValueError):
+        w.arrival_spec(0.0)
+    reqs = w.make_requests(2.0)
+    assert len(reqs) == 8
+    sp = WorkloadSpec(trace="shared_prefix", n_requests=8, scale=0.05)
+    assert sp.make_requests(2.0)[0].session is not None
+
+
+# ---------------------------------------------------------------------------
+# DSL canonicalization (tentpole dedupe foundation)
+# ---------------------------------------------------------------------------
+
+def test_canonical_cluster_spec_merges_and_sorts():
+    # count grouping, node order and suffix spelling order all collapse
+    assert canonical_cluster_spec("worker:A10,worker:A10") == "2xworker:A10"
+    a = canonical_cluster_spec("worker:A10@cache@sarathi,cronus:A100+A10")
+    b = canonical_cluster_spec("cronus:A100+A10,worker:A10@sarathi@cache")
+    assert a == b == "cronus:A100+A10,worker:A10@sarathi@cache"
+    # dp alias normalises to worker
+    assert canonical_cluster_spec("dp:A10") == "worker:A10"
+    # canonical output is a fixed point
+    assert canonical_cluster_spec(a) == a
+    # ClusterSpec objects are accepted too
+    assert canonical_cluster_spec(parse_cluster_spec("2xworker:A10")) \
+        == "2xworker:A10"
+
+
+def test_parse_errors_report_segment_and_position():
+    with pytest.raises(ValueError, match=r"segment 2 at char 11"):
+        parse_cluster_spec("worker:A10,9q:A10")
+    with pytest.raises(ValueError, match=r"segment 1 at char 0"):
+        parse_cluster_spec("nonsense")
+    # unknown suffix names itself and its segment in one line
+    with pytest.raises(ValueError, match=r"@bogus") as ei:
+        parse_cluster_spec("worker:A100,worker:A10@bogus")
+    assert "segment 2" in str(ei.value)
+    assert "\n" not in str(ei.value)
+    # NodeSpec-level refusals (device arity, unknown device) carry the
+    # position too, and keep the "bad node spec" phrasing the ServeSpec
+    # refusal matrix documents
+    with pytest.raises(ValueError, match=r"bad node spec in segment 1"):
+        parse_cluster_spec("worker:A100+A10")
+
+
+# ---------------------------------------------------------------------------
+# search space: templates, enumeration, pruning
+# ---------------------------------------------------------------------------
+
+def test_node_templates_pair_asymmetry():
+    inv = DeviceInventory.parse("A100:1,A10:2,A30:1")
+    nodes = [n for n, _ in node_templates(inv)]
+    # workers for every type; pairs only fast+slow, never inverted or
+    # homogeneous (the PPI/CPI asymmetry pruning rule)
+    assert "worker:A100" in nodes and "worker:A10" in nodes
+    assert "cronus:A100+A10" in nodes and "cronus:A100+A30" in nodes
+    assert "cronus:A30+A10" in nodes
+    assert not any(n.startswith("cronus:A10+") for n in nodes)
+    assert "cronus:A10+A100" not in nodes
+    with pytest.raises(ValueError):
+        node_templates(inv, pair_kinds=("bogus",))
+
+
+def test_enumerate_layouts_prunes_and_dedupes():
+    inv = DeviceInventory.parse("A100:1,A10:2")
+    layouts = enumerate_layouts(inv, max_endpoints=3)
+    assert layouts == sorted(layouts)              # deterministic order
+    assert len(set(layouts)) == len(layouts)       # canonical dedupe
+    assert "2xworker:A10,worker:A100" in layouts
+    assert "cronus:A100+A10,worker:A10" in layouts
+    assert "worker:A100" in layouts                # idle devices allowed
+    # every layout is feasible and within the fan-out cap
+    for layout in layouts:
+        spec = parse_cluster_spec(layout)
+        assert sum(n.count for n in spec.nodes) <= 3
+        devs = [d for n in spec.nodes for _ in range(n.count)
+                for d in n.devices]
+        assert inv.can_build(devs)
+    # full-rack restriction keeps only inventory-exhausting layouts
+    full = enumerate_layouts(inv, max_endpoints=3, require_full_rack=True)
+    assert set(full) <= set(layouts)
+    assert all(len(parse_cluster_spec(f).nodes) >= 1 for f in full)
+    for layout in full:
+        devs = [d for n in parse_cluster_spec(layout).nodes
+                for _ in range(n.count) for d in n.devices]
+        assert sorted(devs) == ["A10", "A10", "A100"]
+
+
+def test_router_and_suffix_variants():
+    assert router_choices("worker:A100") == ("round_robin",)
+    assert router_choices("2xworker:A10") == ("round_robin", "least_loaded")
+    # affinity routers only offered when some node caches
+    assert "prefix_affinity" not in router_choices(
+        "2xworker:A10", ("least_loaded", "prefix_affinity"))
+    assert "prefix_affinity" in router_choices(
+        "2xworker:A10@cache", ("least_loaded", "prefix_affinity"))
+    vs = suffix_variants("2xworker:A10", policies=("sarathi",), cache=True)
+    assert "2xworker:A10@sarathi" in vs
+    assert "2xworker:A10@cache" in vs
+    assert "2xworker:A10@sarathi@cache" in vs
+    assert "2xworker:A10" not in vs                # base never re-emitted
+    with pytest.raises(ValueError):
+        suffix_variants("worker:A10", policies=("bogus",))
+
+
+def test_candidate_cost_is_ledger_priced():
+    # DeviceLedger pricing: one second of the layout in A100-equivalents
+    assert layout_cost_rate("worker:A100") == pytest.approx(1.0)
+    assert layout_cost_rate("cronus:A100+A10") == pytest.approx(
+        UNIT_COST["A100"] + UNIT_COST["A10"])
+    c = Candidate("worker:A10,worker:A10", "least_loaded")
+    assert c.cluster == "2xworker:A10"             # canonicalised on entry
+    assert c.cost_rate == pytest.approx(2 * UNIT_COST["A10"])
+    assert c.n_endpoints == 2
+    with pytest.raises(ValueError):
+        Candidate("worker:A10", "bogus_router")
+
+
+def test_hand_baselines_consume_whole_rack():
+    base = hand_baselines("A100:1,A10:2")
+    assert base["workers"] == "2xworker:A10,worker:A100"
+    assert base["pairs"] == "cronus:A100+A10,worker:A10"
+    for layout in base.values():
+        devs = [d for n in parse_cluster_spec(layout).nodes
+                for _ in range(n.count) for d in n.devices]
+        assert sorted(devs) == ["A10", "A10", "A100"]
+
+
+# ---------------------------------------------------------------------------
+# planner: determinism, memo, surfaces
+# ---------------------------------------------------------------------------
+
+def test_planner_deterministic_same_seed_same_plan():
+    a = plan_topology(RACK, QUICK, max_endpoints=2)
+    b = plan_topology(RACK, QUICK, max_endpoints=2)
+    assert a.to_dict() == b.to_dict()
+    assert a.ranked and a.best.cluster == b.best.cluster
+    assert a.n_memo_hits == 0
+
+
+def test_planner_memo_round_trips_and_resume_reprobes_nothing(tmp_path):
+    memo = EvalMemo()
+    first = plan_topology(RACK, QUICK, max_endpoints=2, memo=memo)
+    assert first.n_evaluations > 0
+    path = tmp_path / "memo.json"
+    memo.save(str(path))
+    reloaded = EvalMemo.load(str(path))
+    assert len(reloaded) == len(memo)
+    second = plan_topology(RACK, QUICK, max_endpoints=2, memo=reloaded)
+    assert second.n_evaluations == 0               # zero completed re-probes
+    assert second.n_memo_hits == first.n_evaluations
+    assert [c.cluster for c in second.ranked] \
+        == [c.cluster for c in first.ranked]
+    assert [c.capacity_qps for c in second.ranked] \
+        == [c.capacity_qps for c in first.ranked]
+
+
+def test_planner_memo_key_includes_workload_and_bracket():
+    memo = EvalMemo()
+    plan_topology(RACK, QUICK, max_endpoints=2, memo=memo)
+    # different workload: same layouts, no reuse
+    other = WorkloadSpec(n_requests=12, scale=0.05, target=0.7)
+    p2 = plan_topology(RACK, other, max_endpoints=2, memo=memo)
+    assert p2.n_evaluations > 0
+    # different probe bracket: no reuse either
+    p3 = plan_topology(RACK, QUICK, max_endpoints=2, memo=memo,
+                      probe_lo=0.5)
+    assert p3.n_evaluations > 0
+
+
+def test_planner_refuses_bad_inputs():
+    with pytest.raises(ValueError):
+        TopologyPlanner("", QUICK)                 # empty rack
+    with pytest.raises(ValueError):
+        TopologyPlanner("A10:0", QUICK)            # zero-count rack
+    with pytest.raises(ValueError):
+        TopologyPlanner(RACK, QUICK, beam_width=0)
+    with pytest.raises(ValueError):
+        TopologyPlanner(RACK, "azure:quantum")
+
+
+def test_serve_spec_from_plan_round_trip():
+    plan = plan_topology(RACK, QUICK, max_endpoints=2)
+    spec = ServeSpec.from_plan(plan)
+    assert spec.cluster == plan.best.cluster
+    assert spec.router == plan.best.router
+    if plan.best.capacity_qps > 0:
+        assert spec.arrival == QUICK.arrival_spec(plan.best.capacity_qps)
+    # plan JSON (the --plan-out artifact) builds the same spec
+    assert ServeSpec.from_plan(
+        json.loads(json.dumps(plan.to_dict()))) == spec
+    # overrides win; bad ranks refuse
+    assert ServeSpec.from_plan(plan, router="least_loaded").router \
+        == "least_loaded"
+    with pytest.raises(ValueError):
+        ServeSpec.from_plan(plan, rank=99)
+    service = spec.build()                         # the spec materialises
+    assert service.endpoints
+
+
+# ---------------------------------------------------------------------------
+# seeded probes (satellite: same seed => same CapacityResult)
+# ---------------------------------------------------------------------------
+
+def test_find_capacity_same_seed_same_result():
+    w = QUICK
+    make_service = ServeSpec(cluster="worker:A100", router="round_robin").build
+
+    def run_once():
+        return find_capacity(make_service, w.make_requests, 0.25, 8.0,
+                             target=w.target, ttft_slo=w.ttft_slo,
+                             tbt_slo=w.tbt_slo, max_iters=3, seed=w.seed)
+    a, b = run_once(), run_once()
+    assert a == b                                  # frozen dataclass equality
+    assert a.evaluations == b.evaluations
+
+
+def test_open_loop_measure_seed_overrides_factory():
+    seen = []
+
+    def make_requests(rate, seed=None):
+        seen.append(seed)
+        return make_trace(6, seed=seed or 0, arrival=f"poisson:{rate!r}",
+                          scale=0.05)
+    spec = ServeSpec(cluster="worker:A100", router="round_robin")
+    open_loop_measure(spec.build, make_requests, 2.0, seed=7)
+    assert seen == [7]
+    # without seed= the one-arg back-compat call is used
+    open_loop_measure(spec.build, lambda rate: make_trace(
+        6, arrival=f"poisson:{rate!r}", scale=0.05), 2.0)
+
+
+# ---------------------------------------------------------------------------
+# capacity seeding (satellite: prior vs measured, inventory edges)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_flops_prior_tracks_measured_capacity():
+    # The FLOPS-proportional prior is calibrated against the committed
+    # open-loop capacity of the cronus A100+A10 pair on the bursty
+    # arrival model (benchmarks/baselines/BENCH_open_loop.json). The
+    # documented tolerance is a factor of 2 either way: the prior only
+    # has to order templates for probe brackets and scale-up choices,
+    # not predict capacity — but drifting past 2x means _QPS_PER_TFLOP
+    # needs recalibrating.
+    spec = ServeSpec(approach="cronus")
+
+    def make_requests(rate, seed=0):
+        return make_trace(100, seed=seed, arrival=f"burst:{rate!r}:4:5")
+    cap = find_capacity(spec.build, make_requests, 1.0, 24.0,
+                        target=0.9, rel_tol=0.08, max_iters=4, seed=0)
+    prior = heuristic_capacity_qps(("A100", "A10"))
+    assert cap.sustainable
+    assert 0.5 * cap.rate < prior < 2.0 * cap.rate
+
+
+def test_inventory_edge_cases():
+    # zero counts vanish on parse; the rack is empty but valid
+    inv = DeviceInventory.parse("A10:0")
+    assert inv.total == 0 and inv.spec == ""
+    assert not inv.can_build(("A10",))
+    with pytest.raises(ValueError):
+        DeviceInventory.parse("B200:1")            # unknown device
+    with pytest.raises(ValueError):
+        DeviceInventory.parse("A10")               # missing count
+    with pytest.raises(ValueError):
+        DeviceInventory.parse("A10:x")             # non-integer count
+    with pytest.raises(ValueError):
+        DeviceInventory({"A10": -1})               # negative count
+    # exhausted rack: take succeeds once, then refuses
+    inv = DeviceInventory.parse("A100:1,A10:1")
+    inv.take(("A100", "A10"))
+    assert inv.total == 0
+    with pytest.raises(ValueError):
+        inv.take(("A10",))
+    inv.put(("A10",))
+    assert inv.counts == {"A10": 1}
+    with pytest.raises(ValueError):
+        inv.put(("B200",))
+    # templates refuse nonsense capacities
+    with pytest.raises(ValueError):
+        EndpointTemplate("worker:A10", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# utilization breakdown (satellite: opt-in, byte-identical when off)
+# ---------------------------------------------------------------------------
+
+def _run_cluster(**metrics_kw):
+    spec = ServeSpec(cluster="worker:A100,worker:A10",
+                     router="round_robin")
+    service = spec.build()
+    for r in make_trace(10, seed=0, interval=0.05, scale=0.05):
+        service.submit(r)
+    service.drain()
+    return service.metrics(**metrics_kw)
+
+
+def test_utilization_breakdown_opt_in():
+    m = _run_cluster(utilization=True)
+    util = m["utilization"]
+    assert set(util) == {"worker0", "worker1"}
+    for row in util.values():
+        assert set(row) == {"busy_frac", "oldest_queued_age",
+                            "dispatched", "completed"}
+        assert 0.0 <= row["busy_frac"] <= 1.0
+        assert row["oldest_queued_age"] >= 0.0
+    # round-robin over 10 requests: 5 each, all completed
+    assert [util[k]["dispatched"] for k in sorted(util)] == [5, 5]
+    assert sum(r["completed"] for r in util.values()) == 10
+
+
+def test_metrics_byte_identical_when_utilization_off():
+    with_flag = _run_cluster(utilization=True)
+    without = _run_cluster()
+    assert "utilization" not in without
+    with_flag.pop("utilization")
+    assert json.dumps(with_flag, sort_keys=True) \
+        == json.dumps(without, sort_keys=True)
