@@ -47,14 +47,27 @@ def index_rows(rows):
 
 
 def compare(name, current, baseline, tol):
-    """Returns a list of human-readable failure strings."""
+    """Returns a list of structured failure records, one per drifted key:
+    {file, row, metric, baseline, current, pct} (baseline/current/pct are
+    None for rows missing from the current run). Every offending key is
+    reported, not just the first, so multi-key drift reads as one table.
+    """
     failures = []
     cur, base = index_rows(current), index_rows(baseline)
     for key, brow in base.items():
         label = "/".join(str(v) for _, v in key)
         crow = cur.get(key)
         if crow is None:
-            failures.append(f"{name}: row {label} missing from current run")
+            failures.append(
+                {
+                    "file": name,
+                    "row": label,
+                    "metric": "(row)",
+                    "baseline": None,
+                    "current": None,
+                    "pct": None,
+                }
+            )
             continue
         for col in LOWER_IS_BAD + HIGHER_IS_BAD:
             if col not in brow or col not in crow:
@@ -62,20 +75,49 @@ def compare(name, current, baseline, tol):
             b, c = float(brow[col]), float(crow[col])
             if math.isnan(b) or math.isnan(c):
                 continue
-            if col in LOWER_IS_BAD and c < b * (1.0 - tol):
+            bad_drop = col in LOWER_IS_BAD and c < b * (1.0 - tol)
+            bad_rise = col in HIGHER_IS_BAD and c > b * (1.0 + tol) and c - b > 1e-9
+            if bad_drop or bad_rise:
                 failures.append(
-                    f"{name}: {label}: {col} regressed "
-                    f"{b:.4f} -> {c:.4f} (> {tol:.0%} drop)"
-                )
-            if col in HIGHER_IS_BAD and c > b * (1.0 + tol) and c - b > 1e-9:
-                failures.append(
-                    f"{name}: {label}: {col} regressed "
-                    f"{b:.4f} -> {c:.4f} (> {tol:.0%} rise)"
+                    {
+                        "file": name,
+                        "row": label,
+                        "metric": col,
+                        "baseline": b,
+                        "current": c,
+                        "pct": (c - b) / b if b else math.inf,
+                    }
                 )
     for key in cur.keys() - base.keys():
         label = "/".join(str(v) for _, v in key)
         print(f"note: {name}: new row {label} (no baseline yet)")
     return failures
+
+
+def format_drift_table(failures):
+    """Aligned per-key drift table; one line per (file, row, metric)."""
+    header = ("file", "row", "metric", "baseline", "current", "drift")
+    rows = [header]
+    for f in failures:
+        if f["baseline"] is None:
+            rows.append((f["file"], f["row"], f["metric"], "-", "missing", "-"))
+        else:
+            rows.append(
+                (
+                    f["file"],
+                    f["row"],
+                    f["metric"],
+                    f"{f['baseline']:.4f}",
+                    f"{f['current']:.4f}",
+                    f"{f['pct']:+.1%}",
+                )
+            )
+    widths = [max(len(r[i]) for r in rows) for i in range(len(header))]
+    lines = []
+    for r in rows:
+        lines.append("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip())
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
 
 
 def main(argv=None):
@@ -112,10 +154,9 @@ def main(argv=None):
     if failures:
         print(
             f"\nFAIL: {len(failures)} perf regression(s) beyond "
-            f"{args.tol:.0%} tolerance:"
+            f"{args.tol:.0%} tolerance:\n"
         )
-        for msg in failures:
-            print(f"  - {msg}")
+        print(format_drift_table(failures))
         return 1
     print(f"OK: all rows within {args.tol:.0%} of baseline")
     return 0

@@ -282,9 +282,9 @@ class Autoscaler:
         self._devices[name] = tpl.devices
         self._capacity[name] = tpl.capacity_qps
         self._last_action = now
-        self.events.append(dict(t=now, action="scale_up", endpoint=name,
-                                node=tpl.node, rate=rate,
-                                capacity=capacity, max_age=max_age))
+        self._event(dict(t=now, action="scale_up", endpoint=name,
+                         node=tpl.node, rate=rate,
+                         capacity=capacity, max_age=max_age))
         return name
 
     def _scale_down(self, service, now: float, rate: float,
@@ -308,12 +308,27 @@ class Autoscaler:
             self.inventory.put(devices)
             self.ledger.close(ep.name, now)
             self._last_action = now
-            self.events.append(dict(t=now, action="scale_down",
-                                    endpoint=ep.name, rate=rate,
-                                    capacity=capacity,
-                                    busy_frac=s.busy_frac))
+            self._event(dict(t=now, action="scale_down",
+                             endpoint=ep.name, rate=rate,
+                             capacity=capacity,
+                             busy_frac=s.busy_frac))
             return ep.name
         return None
+
+    def _event(self, event: Dict) -> None:
+        """Record one scaling action: on the flight recorder's control
+        track when tracing is on (the unified event schema — autoscale
+        actions land beside submits/routes/attaches on the timeline),
+        and always on the legacy ``events`` list, which ``report()``
+        exposes as the compatibility view."""
+        self.events.append(event)
+        svc = self._service
+        tracer = svc.runtime.tracer if svc is not None else None
+        if tracer is not None:
+            args = {k: v for k, v in event.items()
+                    if k not in ("t", "action")}
+            tracer.instant(tracer.control, event["action"], event["t"],
+                           args, cat="autoscale")
 
     # ------------------------------------------------------------------
     def report(self, now: Optional[float] = None) -> Dict:

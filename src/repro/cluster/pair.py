@@ -86,6 +86,14 @@ class CronusPairEndpoint(Endpoint):
         l_p = self.balancer.partial_prefill_length(          # step (2)
             req.input_len, stats)
         req.partial_len = int(l_p)
+        tracer = runtime.tracer if runtime is not None else None
+        if tracer is not None:
+            tracer.instant(
+                tracer.control, "balancer_split", self.ppi.clock,
+                {"req": req.req_id, "endpoint": self.name,
+                 "l_p": req.partial_len, "input_len": req.input_len,
+                 "cpi_n_decode": stats.n_decode,
+                 "cpi_free_kv_blocks": stats.free_kv_blocks})
         if (self.decode_offload and l_p >= req.input_len
                 and not self.balancer.__class__.__name__.startswith("Fixed")):
             # Alg. 1 fell back (CPI out of KV blocks) -> offload the whole
@@ -280,6 +288,13 @@ class CronusPairEndpoint(Endpoint):
                     if v.req_id != rid]
                 orig.metrics.cancelled = True
                 orig.metrics.cancel_time = self.ppi.clock
+                if self.ppi.tracer is not None:
+                    tracer = self.ppi.tracer
+                    tracer.instant(self.ppi.trace_track, "cancel",
+                                   self.ppi.clock, {"req": rid})
+                    tracer.async_end(tracer.control, "request",
+                                     self.ppi.clock, rid,
+                                     {"cancelled": True})
             orig.state = ReqState.CANCELLED
             orig.kv_payload = None
             return True

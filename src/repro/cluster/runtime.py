@@ -230,6 +230,9 @@ class ClusterRuntime:
     def __init__(self, endpoints: Sequence[Endpoint], router):
         self.endpoints = list(endpoints)
         self.router = router
+        # flight recorder (repro.obs): set by InferenceService.start_trace;
+        # None = zero tracing overhead anywhere in the loop
+        self.tracer = None
         self.engines: List[Engine] = [e for ep in self.endpoints
                                       for e in ep.engines]
         self._events: List[_Event] = []
@@ -286,6 +289,9 @@ class ClusterRuntime:
         self.endpoints.append(ep)
         self.engines = [e for ep_ in self.endpoints for e in ep_.engines]
         self.transfers.register(ep)
+        if self.tracer is not None:
+            self.tracer.instant(self.tracer.control, "attach", now,
+                                {"endpoint": ep.name}, cat="membership")
         self.router.on_membership_change(self.endpoints)
 
     def detach_endpoint(self, name: str,
@@ -312,6 +318,11 @@ class ClusterRuntime:
             raise KeyError(f"unknown endpoint {name!r}; have "
                            f"{[e.name for e in self.endpoints]}")
         self._draining.add(name)
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.tracer.control, "detach",
+                max((e.clock for e in self.engines), default=0.0),
+                {"endpoint": name, "migrate": migrate}, cat="membership")
         try:
             displaced = ep.migrate() if migrate else ep.drain()
             for r in displaced:
@@ -379,6 +390,8 @@ class ClusterRuntime:
             ep = self.router.select(pending[0], endpoints)
             if ep is not None:
                 self._record_dispatch(ep.name)
+                if self.tracer is not None:
+                    self._trace_route(head, ep)
                 ep.submit(pending.popleft(), self)
                 continue
             window = getattr(self.router, "lookahead", 0)
@@ -397,6 +410,8 @@ class ClusterRuntime:
             req = pending[placed_at]
             del pending[placed_at]
             self._record_dispatch(ep.name)
+            if self.tracer is not None:
+                self._trace_route(req, ep, lookahead=placed_at)
             ep.submit(req, self)
 
     def _route_kv(self, req: Request, endpoints: List[Endpoint]) -> bool:
@@ -414,6 +429,12 @@ class ClusterRuntime:
                         key=lambda t: (t[0].queue_depth,
                                        -t[0].free_kv_blocks, t[1]))
         self._record_dispatch(dst.name)
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.tracer.control, "route_kv", req.ready_time,
+                {"req": req.req_id, "endpoint": dst.name,
+                 "src": req.kv_src or "detached",
+                 "tokens": req.context_len})
         self.transfers.transfer(
             req, src=req.kv_src or "detached", dst=dst.name,
             deliver=lambda r, e=dst: e.submit_kv(r, self),
@@ -422,6 +443,20 @@ class ClusterRuntime:
 
     def _record_dispatch(self, name: str) -> None:
         self.dispatched[name] = self.dispatched.get(name, 0) + 1
+
+    def _trace_route(self, req: Request, ep: Endpoint,
+                     lookahead: int = 0) -> None:
+        """Route-decision instant on the control track (tracing on only):
+        which endpoint won the request, under which router, at what load
+        (the router's selection signal)."""
+        s = ep.stats()
+        args = {"req": req.req_id, "endpoint": ep.name,
+                "router": type(self.router).__name__,
+                "queue_depth": s.queue_depth,
+                "free_kv_blocks": s.free_kv_blocks}
+        if lookahead:
+            args["lookahead"] = lookahead
+        self.tracer.instant(self.tracer.control, "route", req.arrival, args)
 
     def tick(self, pending: deque) -> bool:
         """One round of the event loop: dispatch pending arrivals, move

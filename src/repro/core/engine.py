@@ -91,10 +91,27 @@ class Engine:
         # called as on_token(request, token_id, clock) at the moment each
         # output token's timestamp is recorded. None = no overhead.
         self.on_token = None
+        # flight-recorder hook (repro.obs): InferenceService.start_trace
+        # sets tracer + this engine's track handle. None = zero overhead —
+        # every tracing site sits behind an `is not None` guard, so an
+        # untraced run allocates nothing on this path.
+        self.tracer = None
+        self.trace_track = 0
 
     def _emit(self, req: Request, token: int):
         if self.on_token is not None:
             self.on_token(req, token, self.clock)
+
+    def _trace_gauges(self, tracer):
+        """Per-iteration gauge samples (tracing on only): queue depth,
+        free KV blocks, trailing busy fraction."""
+        resident = sum(1 for r in self.slots if r is not None)
+        tracer.counter(self.trace_track, "queue_depth", self.clock,
+                       {"queued": len(self.queue), "resident": resident})
+        tracer.counter(self.trace_track, "free_kv_blocks", self.clock,
+                       {"free": self.allocator.num_free})
+        tracer.counter(self.trace_track, "busy_frac", self.clock,
+                       {"busy": self.busy_fraction()})
 
     # ------------------------------------------------------------------
     # busy-time accounting (autoscaler utilization signal)
@@ -158,6 +175,9 @@ class Engine:
             # metrics object; preemption-recompute re-placements keep the
             # original): the queueing/service boundary of TTFT
             req.metrics.service_start_time = self.clock
+            if self.tracer is not None:
+                self.tracer.instant(self.trace_track, "service_start",
+                                    self.clock, {"req": req.req_id})
         if self.allocator.prefix_cache and req.input_len > 1:
             if req.context_len == 0 and req.kv_payload is None:
                 shared = self.allocator.share_blocks(
@@ -165,6 +185,10 @@ class Engine:
                 if shared:
                     req.context_len = shared
                     req.metrics.cached_prefix_tokens += shared
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            self.trace_track, "prefix_hit", self.clock,
+                            {"req": req.req_id, "tokens": shared})
             elif req.kv_payload is not None \
                     and req.context_len < req.input_len:
                 # Cronus handoff mid-prompt: the cache may hold a longer
@@ -176,6 +200,11 @@ class Engine:
                 if shared > req.context_len:
                     req.metrics.cached_prefix_tokens += \
                         shared - req.context_len
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            self.trace_track, "prefix_hit", self.clock,
+                            {"req": req.req_id,
+                             "tokens": shared - req.context_len})
                     req.context_len = shared
         # migrated decoders can carry more context than the policy's
         # admission reservation (context covers generated tokens too) —
@@ -201,6 +230,10 @@ class Engine:
         re-prefill reproduces the full context and the next completion
         token continues the sequence), and requeue at the front."""
         self.n_preemptions += 1
+        if self.tracer is not None:
+            self.tracer.instant(self.trace_track, "preempt", self.clock,
+                                {"req": req.req_id,
+                                 "folded_tokens": len(req.generated)})
         req.preempted = True
         if req.generated:
             req.prompt = np.concatenate(
@@ -286,7 +319,11 @@ class Engine:
     # ------------------------------------------------------------------
     def step(self) -> float:
         """Execute one iteration; returns its simulated duration (s)."""
+        tracer = self.tracer
+        t_start = self.clock
         plan = self.scheduler.plan(self._view())
+        if tracer is not None:
+            n_admit, n_preempt = len(plan.admit), len(plan.preempt)
         self._apply(plan)
 
         # --- ingest pending KV transfers (overlapped with compute) -------
@@ -300,8 +337,13 @@ class Engine:
                     # prefix-cache hit may have advanced context_len past
                     # it, but only the payload actually crosses the wire
                     moved = r.partial_len if r.partial_len else r.context_len
-                    transfer_time = max(transfer_time,
-                                        self.device.transfer_time(moved))
+                    wire = self.device.transfer_time(moved)
+                    transfer_time = max(transfer_time, wire)
+                    if tracer is not None:
+                        tracer.instant(self.trace_track, "kv_ingest",
+                                       t_start, {"req": r.req_id,
+                                                 "tokens": moved,
+                                                 "wire_s": wire})
                 r.kv_payload = None
                 r.state = (ReqState.RUNNING if r.context_len >= r.input_len
                            else ReqState.PREFILL)
@@ -338,6 +380,23 @@ class Engine:
         chunks = [(c.req, n) for c in plan.prefill
                   if (n := min(c.chunk_len, c.req.prefill_remaining)) > 0]
 
+        # chunk provenance for the trace, captured BEFORE execution moves
+        # context_len: a chunk is *migrated prefill* — the remainder of a
+        # prefill whose head ran elsewhere and crossed the wire — iff the
+        # request carries a nonzero partial split, its KV actually moved
+        # (not a local decode-offload), it is not a preemption recompute
+        # (those restart from context 0 on local KV), and the chunk starts
+        # at or past the split point. PPI-side views carry the same
+        # partial_len but chunk below it, so they never count.
+        if tracer is not None:
+            chunk_info = [
+                [r.req_id, n, r.context_len,
+                 1 if (r.partial_len > 0 and not r.local_payload
+                       and not r.preempted
+                       and r.context_len >= r.partial_len) else 0]
+                for r, n in chunks]
+            migrated_tokens = sum(c[1] for c in chunk_info if c[3])
+
         if not chunks and not decode_reqs:
             # idle iteration (only transfers); ingest-completed requests
             # still pay the transfer before finishing (TTFT fairness rule)
@@ -345,10 +404,21 @@ class Engine:
                 self.clock += transfer_time
                 for r in ttft_at_ingest:
                     r.metrics.first_token_time = self.clock
+                    if tracer is not None:
+                        tracer.instant(self.trace_track, "first_token",
+                                       self.clock, {"req": r.req_id})
                     self._emit(r, r.generated[-1])
                     r.metrics.finish_time = self.clock
                     self._finish(r)
             self._record_work(transfer_time)
+            if tracer is not None and transfer_time > 0.0:
+                tracer.complete(
+                    self.trace_track, "iter", t_start, self.clock,
+                    {"n_decode": 0, "prefill_tokens": 0,
+                     "migrated_prefill_tokens": 0, "n_admit": n_admit,
+                     "n_preempt": n_preempt, "transfer_s": transfer_time,
+                     "chunks": []})
+                self._trace_gauges(tracer)
             return transfer_time
 
         # --- execute prefill chunks (possibly several requests) -----------
@@ -388,8 +458,21 @@ class Engine:
         duration = max(duration, transfer_time)
         self.clock += duration
         self._record_work(duration)
+        if tracer is not None:
+            tracer.complete(
+                self.trace_track, "iter", t_start, self.clock,
+                {"n_decode": len(decode_reqs),
+                 "decode_ctx": decode_ctx_sum,
+                 "prefill_tokens": prefill_tokens,
+                 "migrated_prefill_tokens": migrated_tokens,
+                 "n_admit": n_admit, "n_preempt": n_preempt,
+                 "transfer_s": transfer_time, "chunks": chunk_info})
+            self._trace_gauges(tracer)
         for r in ttft_at_ingest:
             r.metrics.first_token_time = self.clock
+            if tracer is not None:
+                tracer.instant(self.trace_track, "first_token",
+                               self.clock, {"req": r.req_id})
             self._emit(r, r.generated[-1])
             if r.done:
                 r.metrics.finish_time = self.clock
@@ -407,6 +490,13 @@ class Engine:
             if self.ecfg.prefill_only and r.output_len == 0:
                 r.first_token = first
                 r.metrics.first_token_time = self.clock
+                if tracer is not None:
+                    # PPI prefill view: views share the original's metrics
+                    # object, so this timestamp is later superseded by the
+                    # CPI's — the report keeps the last one, matching the
+                    # overwrite semantics below
+                    tracer.instant(self.trace_track, "first_token",
+                                   self.clock, {"req": r.req_id})
                 self._complete_prefill_instance(r)
             else:
                 r.first_token = first
@@ -426,6 +516,9 @@ class Engine:
                     # lands here too, so a stale PPI timestamp can never
                     # masquerade as a delivered TTFT
                     r.metrics.first_token_time = self.clock
+                    if tracer is not None:
+                        tracer.instant(self.trace_track, "first_token",
+                                       self.clock, {"req": r.req_id})
                 if r.done:
                     r.metrics.finish_time = self.clock
                     self._finish(r)
@@ -447,6 +540,12 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _finish(self, req: Request):
+        if self.tracer is not None:
+            self.tracer.instant(self.trace_track, "finish", self.clock,
+                                {"req": req.req_id,
+                                 "n_generated": len(req.generated)})
+            self.tracer.async_end(self.tracer.control, "request",
+                                  self.clock, req.req_id)
         req.state = ReqState.FINISHED
         if self.allocator.prefix_cache:
             # register the finished sequence (prompt + generated) in the
@@ -585,6 +684,12 @@ class Engine:
         req.state = ReqState.CANCELLED
         req.metrics.cancelled = True
         req.metrics.cancel_time = self.clock
+        if self.tracer is not None:
+            self.tracer.instant(self.trace_track, "cancel", self.clock,
+                                {"req": req.req_id})
+            self.tracer.async_end(self.tracer.control, "request",
+                                  self.clock, req.req_id,
+                                  {"cancelled": True})
         return req
 
     def _complete_prefill_instance(self, req: Request):

@@ -105,6 +105,10 @@ class BlockAllocator:
         self.on_demote = None
         self.on_promote = None
         self.on_host_evict = None
+        # flight recorder back-reference: the allocator has no clock of
+        # its own, so InferenceService.start_trace points this at the
+        # owning engine (clock + tracer + track). None = zero overhead.
+        self.trace_engine = None
         self._pending_host_tokens = 0   # PCIe traffic awaiting charge
         # counters (benchmark / metrics surface)
         self.n_prefix_hits = 0      # share_blocks calls that reused tokens
@@ -158,6 +162,10 @@ class BlockAllocator:
         self._host[h] = (parent, tokens)          # MRU end
         self.n_demotions += 1
         self._pending_host_tokens += len(tokens)
+        eng = self.trace_engine
+        if eng is not None and eng.tracer is not None:
+            eng.tracer.instant(eng.trace_track, "kv_demote", eng.clock,
+                               {"tokens": len(tokens)})
         if self.on_demote is not None:
             self.on_demote(b, h)
         while len(self._host) > self.host_blocks:
@@ -180,6 +188,10 @@ class BlockAllocator:
         self._ref[blk] = 1
         self.n_promotions += 1
         self._pending_host_tokens += len(tokens)
+        eng = self.trace_engine
+        if eng is not None and eng.tracer is not None:
+            eng.tracer.instant(eng.trace_track, "kv_promote", eng.clock,
+                               {"tokens": len(tokens)})
         if self.on_promote is not None:
             self.on_promote(blk, key)
         return blk

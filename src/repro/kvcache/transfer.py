@@ -122,17 +122,35 @@ class TransferEngine:
         self._inflight[handle.req_id] = handle
         self.n_transfers += 1
 
-        def _fire(h=handle, r=req):
+        def _fire(h=handle, r=req, t=t_arrive):
             if self._inflight.get(h.req_id) is h:
                 del self._inflight[h.req_id]
+            tracer = getattr(self._runtime, "tracer", None)
             if h.state == "cancelled" or r.state is ReqState.CANCELLED:
                 h.state = "cancelled"
                 self.n_cancelled += 1
+                if tracer is not None:
+                    tracer.instant(tracer.track_for(h.src), "kv_cancelled",
+                                   t, {"req": h.req_id, "kind": h.kind,
+                                       "dst": h.dst})
                 return
             h.state = "delivered"
             self.tokens_moved += h.n_tokens
             self.tokens_by_kind[h.kind] = (
                 self.tokens_by_kind.get(h.kind, 0) + h.n_tokens)
+            if tracer is not None:
+                # both halves of the flow arrow are emitted at delivery,
+                # so every send pairs with exactly one receive (cancelled
+                # transfers surface as kv_cancelled instants instead)
+                fid = tracer.new_flow_id()
+                args = {"req": h.req_id, "kind": h.kind,
+                        "tokens": h.n_tokens, "src": h.src, "dst": h.dst}
+                tracer.flow_start(tracer.track_for(h.src), "kv_send",
+                                  h.t_post, fid, args)
+                tracer.flow_end(tracer.track_for(h.dst), "kv_recv",
+                                t, fid, args)
+                tracer.counter(tracer.control, "transfer_tokens", t,
+                               {h.kind: self.tokens_by_kind[h.kind]})
             deliver(r)
 
         if self._runtime is not None:

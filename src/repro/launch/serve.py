@@ -132,6 +132,11 @@ def build_arg_parser() -> argparse.ArgumentParser:
     d.add_argument("--dump-spec", default=None, metavar="FILE",
                    help="write the resolved ServeSpec as JSON and exit "
                         "('-' for stdout)")
+    d.add_argument("--trace-out", default=None, metavar="FILE",
+                   help="record the run's flight-recorder trace and "
+                        "write Perfetto-loadable Chrome JSON here "
+                        "(analyze with tools/trace_report.py; see "
+                        "docs/OBSERVABILITY.md)")
     d.add_argument("--out", default=None)
     return ap
 
@@ -168,6 +173,10 @@ def _run_plan(args):
         raise SystemExit("bad plan: --stream/--cancel-after demo the "
                          "closed-loop replay path; planning (and "
                          "--serve-best) runs open-loop")
+    if args.trace_out:
+        raise SystemExit("bad plan: --trace-out records one serving run; "
+                         "planning probes many candidate runs — trace the "
+                         "winner by serving it directly")
     try:
         workload = parse_workload(args.workload or "azure:poisson")
         # the workload-group flags shrink probe traces when given
@@ -261,7 +270,10 @@ def main():
             raise SystemExit("bad workload: --stream/--cancel-after demo the "
                              "closed-loop replay path; they cannot follow an "
                              "--arrival open-loop run")
-        driver = OpenLoopDriver(spec.build())
+        service = spec.build()
+        if args.trace_out:
+            service.start_trace()
+        driver = OpenLoopDriver(service)
         driver.run(reqs)
         metrics = driver.metrics()
         scaler = driver.service.autoscaler
@@ -269,6 +281,8 @@ def main():
             metrics["autoscale"] = scaler.report(driver.service.now)
     else:
         service = spec.build()
+        if args.trace_out:
+            service.start_trace()
         handles = [service.submit(r) for r in reqs]
 
         if args.stream or args.cancel_after is not None:
@@ -286,6 +300,8 @@ def main():
                     break
 
         metrics = service.drain()
+    if args.trace_out:
+        service.export_trace(args.trace_out)
     print(json.dumps(metrics, indent=2))
     if args.out:
         with open(args.out, "w") as f:

@@ -1,0 +1,4 @@
+"""Observability: structured tracing and Perfetto export (docs/OBSERVABILITY.md)."""
+from repro.obs.tracer import Tracer
+
+__all__ = ["Tracer"]

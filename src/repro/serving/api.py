@@ -619,6 +619,56 @@ class InferenceService:
         for eng in self.runtime.engines:
             eng.on_token = self._on_token
 
+    # ------------------------------------------------------------------
+    # flight recorder (repro.obs)
+    # ------------------------------------------------------------------
+    @property
+    def tracer(self):
+        """The active tracer, or None (tracing off = zero overhead)."""
+        return self.runtime.tracer
+
+    def start_trace(self):
+        """Switch the flight recorder on: create a
+        :class:`~repro.obs.Tracer`, register one Perfetto track per
+        engine (grouped per endpoint), and thread it through the
+        runtime, every engine, and each engine's allocator. Idempotent —
+        a second call returns the live tracer. Call before submitting
+        work for a complete record."""
+        if self.runtime.tracer is None:
+            from repro.obs import Tracer
+            self.runtime.tracer = Tracer()
+            for ep in self.runtime.endpoints:
+                self._wire_trace(ep)
+        return self.runtime.tracer
+
+    def _wire_trace(self, ep: Endpoint) -> None:
+        """Register ``ep``'s engines as trace tracks. Lane naming matches
+        the transfer engine's pool names (``endpoint/engine`` for pairs,
+        bare ``endpoint`` for single-engine workers), so flow arrows land
+        on the lanes the iteration spans live on."""
+        tracer = self.runtime.tracer
+        multi = len(ep.engines) > 1
+        for eng in ep.engines:
+            track = tracer.track(ep.name, eng.name if multi else "main")
+            eng.tracer = tracer
+            eng.trace_track = track
+            eng.allocator.trace_engine = eng
+            device = getattr(getattr(eng.device, "spec", None), "name",
+                             type(eng.device).__name__)
+            tracer.instant(track, "track_meta", eng.clock,
+                           {"device": device,
+                            "prefill_only": eng.ecfg.prefill_only,
+                            "decode_only": eng.ecfg.decode_only,
+                            "sched_policy": eng.ecfg.sched_policy},
+                           cat="metadata")
+
+    def export_trace(self, path: str) -> None:
+        """Write the recorded trace as Perfetto-loadable Chrome JSON."""
+        if self.runtime.tracer is None:
+            raise ValueError("tracing was never started — call "
+                             "start_trace() before the run")
+        self.runtime.tracer.export(path)
+
     def _on_token(self, req: Request, token: int, t: float) -> None:
         # Engine.step emission hook: buffer into the request's handle for
         # its tokens() stream — but only for subscribed handles, so plain
@@ -686,6 +736,8 @@ class InferenceService:
         self.runtime.attach_endpoint(ep, now=now)
         for eng in ep.engines:
             eng.on_token = self._on_token
+        if self.runtime.tracer is not None:
+            self._wire_trace(ep)
 
     def detach_endpoint(self, name: str, migrate: bool = True) -> Endpoint:
         """Remove a live endpoint: its residents re-enter this service's
@@ -724,6 +776,14 @@ class InferenceService:
         self._pending.insert(i, request)
         handle = RequestHandle(request, self)
         self._handles[request.req_id] = handle
+        tracer = self.runtime.tracer
+        if tracer is not None:
+            tracer.instant(tracer.control, "submit", request.arrival,
+                           {"req": request.req_id,
+                            "input_len": request.input_len,
+                            "output_len": request.output_len})
+            tracer.async_begin(tracer.control, "request", request.arrival,
+                               request.req_id)
         return handle
 
     def cancel(self, handle: RequestHandle) -> bool:
@@ -737,6 +797,12 @@ class InferenceService:
             req.state = ReqState.CANCELLED
             req.metrics.cancelled = True
             req.metrics.cancel_time = self.now
+            tracer = self.runtime.tracer
+            if tracer is not None:
+                tracer.instant(tracer.control, "cancel", self.now,
+                               {"req": req.req_id, "pending": True})
+                tracer.async_end(tracer.control, "request", self.now,
+                                 req.req_id, {"cancelled": True})
         else:
             for ep in self.runtime.endpoints:
                 if ep.cancel(req):
@@ -822,6 +888,11 @@ class InferenceService:
                     "dispatched": self.runtime.dispatched.get(ep.name, 0),
                     "completed": ep.n_finished(),
                 }
+            # cluster-wide KV movement (per-kind token counters +
+            # cancellation stats) — only when transfers actually ran, so
+            # transfer-free topologies keep their exact utilization dict
+            if self.runtime.transfers.n_transfers > 0:
+                util["transfers"] = self.runtime.transfers.stats()
         return aggregate(ms, ttft_slo, tbt_slo, queueing=queueing,
                          utilization=util)
 

@@ -1,0 +1,287 @@
+"""The flight recorder: tracing-off bit-identity, deterministic traces,
+Chrome trace_event schema validity, flow pairing, the trace_report
+overlap/TTFT analysis cross-checked against ``aggregate``, and the
+autoscaler's unified event schema."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+from repro.configs import get_config
+from repro.serving.api import ServeSpec
+from repro.serving.simulator import APPROACHES
+from repro.serving.trace import make_trace
+from repro.workloads import OpenLoopDriver
+
+CFG = get_config("llama3-8b")
+
+_TR_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "tools", "trace_report.py")
+_spec = importlib.util.spec_from_file_location("trace_report", _TR_PATH)
+trace_report = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(trace_report)
+
+
+def _traced_run(spec, reqs, open_loop=False):
+    service = spec.build()
+    tracer = service.start_trace()
+    if open_loop:
+        OpenLoopDriver(service).run(reqs)
+        metrics = service.metrics(queueing=True)
+    else:
+        metrics = service.run(reqs)
+    return service, tracer, metrics
+
+
+# ---------------------------------------------------------------------------
+# contract 1: tracing off is free — aggregates byte-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("interval", [0.0, 1 / 7.0],
+                         ids=["maxtput", "staggered"])
+@pytest.mark.parametrize("approach", APPROACHES)
+def test_tracing_leaves_aggregates_bit_identical(approach, interval):
+    reqs = make_trace(50, seed=0, interval=interval)
+    plain = ServeSpec(approach=approach).build().run(reqs.fresh())
+    _, _, traced = _traced_run(ServeSpec(approach=approach), reqs.fresh())
+    assert json.dumps(traced, sort_keys=True) == \
+        json.dumps(plain, sort_keys=True)
+
+
+def test_tracer_off_by_default_everywhere():
+    service = ServeSpec(approach="cronus").build()
+    assert service.tracer is None
+    for ep in service.endpoints:
+        for eng in ep.engines:
+            assert eng.tracer is None
+            assert eng.allocator.trace_engine is None
+    with pytest.raises(ValueError, match="start_trace"):
+        service.export_trace("/tmp/never.json")
+
+
+# ---------------------------------------------------------------------------
+# contract 2: tracing on is deterministic
+# ---------------------------------------------------------------------------
+
+def test_trace_deterministic_across_runs():
+    reqs = make_trace(40, seed=3, interval=1 / 9.0)
+    runs = []
+    for _ in range(2):
+        _, tracer, _ = _traced_run(ServeSpec(approach="cronus"),
+                                   reqs.fresh())
+        runs.append(tracer.to_chrome())
+    assert json.dumps(runs[0], sort_keys=True) == \
+        json.dumps(runs[1], sort_keys=True)
+
+
+def test_start_trace_idempotent():
+    service = ServeSpec(approach="cronus").build()
+    assert service.start_trace() is service.start_trace()
+
+
+# ---------------------------------------------------------------------------
+# schema: valid trace_event JSON, nested spans, monotone tracks, flows
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("approach", APPROACHES)
+def test_trace_structurally_valid(approach):
+    reqs = make_trace(30, seed=1, interval=1 / 8.0)
+    _, tracer, _ = _traced_run(ServeSpec(approach=approach), reqs.fresh())
+    events = tracer.to_chrome()
+    json.dumps(events)                       # every event serializable
+    assert trace_report.validate(events) == []
+    # every lane got named metadata
+    names = trace_report.track_names(events)
+    used = {(e["pid"], e["tid"]) for e in events if e.get("ph") != "M"}
+    assert used <= set(names)
+
+
+def test_export_file_shape(tmp_path):
+    reqs = make_trace(10, seed=0, interval=0.0)
+    service, tracer, _ = _traced_run(ServeSpec(approach="cronus"),
+                                     reqs.fresh())
+    path = tmp_path / "run.json"
+    service.export_trace(str(path))
+    data = json.loads(path.read_text())
+    assert set(data) == {"traceEvents", "displayTimeUnit"}
+    assert data["traceEvents"] == tracer.to_chrome()
+    # metadata first, then strictly ts-sorted events
+    body = [e for e in data["traceEvents"] if e["ph"] != "M"]
+    assert all(b["ts"] <= a["ts"] for b, a in zip(body, body[1:]))
+
+
+def test_flow_pairs_exactly_once_per_delivered_handoff():
+    reqs = make_trace(40, seed=2, interval=1 / 8.0)
+    service, tracer, _ = _traced_run(ServeSpec(approach="cronus"),
+                                     reqs.fresh())
+    sends = [e for e in tracer.events if e["ph"] == "s"]
+    recvs = [e for e in tracer.events if e["ph"] == "f"]
+    eng = service.runtime.transfers
+    assert eng.n_transfers > 0
+    assert len(sends) == len(recvs) == eng.n_transfers - eng.n_cancelled
+    assert sorted(e["id"] for e in sends) == sorted(e["id"] for e in recvs)
+    # tokens on the wire match the engine's own per-kind ledger
+    by_kind = {}
+    for e in recvs:
+        by_kind[e["args"]["kind"]] = (by_kind.get(e["args"]["kind"], 0)
+                                      + e["args"]["tokens"])
+    assert by_kind == dict(eng.tokens_by_kind)
+
+
+# ---------------------------------------------------------------------------
+# trace_report: the analysis proves the paper's claim from the trace alone
+# ---------------------------------------------------------------------------
+
+def test_overlap_cronus_positive_disagg_zero():
+    reqs = make_trace(40, seed=0, arrival="poisson:6",
+                      vocab_size=CFG.vocab_size)
+    _, tr_c, _ = _traced_run(ServeSpec(approach="cronus",
+                                       arrival="poisson:6"),
+                             reqs.fresh(), open_loop=True)
+    _, tr_d, _ = _traced_run(ServeSpec(approach="disagg_hl",
+                                       arrival="poisson:6"),
+                             reqs.fresh(), open_loop=True)
+    cronus = trace_report.overlap_report(tr_c.to_chrome())
+    disagg = trace_report.overlap_report(tr_d.to_chrome())
+    # Cronus's high-end GPU decodes while chewing the migrated prefill
+    # remainder; pure disaggregation's decoder never sees migrated
+    # prefill chunks at all — the paper's core claim, mechanically
+    assert cronus["overlap_frac"] > 0.0
+    assert cronus["migrated_busy_s"] > 0.0
+    assert disagg["overlap_frac"] == 0.0
+    assert disagg["per_track"] == {}
+
+
+def test_ttft_decomposition_matches_aggregate():
+    reqs = make_trace(40, seed=0, arrival="poisson:6",
+                      vocab_size=CFG.vocab_size)
+    _, tracer, metrics = _traced_run(ServeSpec(approach="cronus",
+                                               arrival="poisson:6"),
+                                     reqs.fresh(), open_loop=True)
+    ttft = trace_report.ttft_decomposition(tracer.to_chrome())
+    assert ttft["n_finished"] == metrics["completed"]
+    for key in ("queueing_p50", "queueing_p99", "ttft_service_p99"):
+        assert ttft[key] == pytest.approx(metrics[key], abs=1e-6), key
+
+
+def test_bubble_report_covers_every_engine_lane():
+    reqs = make_trace(30, seed=1, interval=1 / 8.0)
+    _, tracer, _ = _traced_run(ServeSpec(approach="cronus"), reqs.fresh())
+    bubbles = trace_report.bubble_report(tracer.to_chrome())
+    assert set(bubbles) == {"cronus/ppi", "cronus/cpi"}
+    for lane in bubbles.values():
+        assert 0.0 <= lane["bubble_frac"] < 1.0
+        assert lane["n_iterations"] > 0
+        assert lane["busy_s"] <= lane["span_s"] + 1e-9
+
+
+def test_validate_flags_broken_traces():
+    ok = [{"ph": "X", "pid": 1, "tid": 1, "ts": 0.0, "dur": 5.0,
+           "name": "iter"}]
+    assert trace_report.validate(ok) == []
+    regressed = ok + [{"ph": "i", "pid": 1, "tid": 1, "ts": -4.0,
+                       "name": "late", "s": "t"}]
+    assert any("regressed" in p for p in trace_report.validate(regressed))
+    straddle = ok + [{"ph": "X", "pid": 1, "tid": 1, "ts": 3.0, "dur": 9.0,
+                      "name": "iter"}]
+    assert any("straddle" in p for p in trace_report.validate(straddle))
+    lone = [{"ph": "s", "pid": 1, "tid": 1, "ts": 1.0, "id": 7,
+             "name": "kv_send", "cat": "flow"}]
+    assert any("flow id 7" in p for p in trace_report.validate(lone))
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle on the trace: submit -> ... -> finish/cancel
+# ---------------------------------------------------------------------------
+
+def test_request_lifecycle_events_present():
+    reqs = make_trace(20, seed=4, interval=1 / 6.0)
+    service, tracer, metrics = _traced_run(ServeSpec(approach="cronus"),
+                                           reqs.fresh())
+    by_name = {}
+    for e in tracer.events:
+        by_name.setdefault(e["name"], []).append(e)
+    n = metrics["completed"]
+    assert len(by_name["submit"]) == n
+    assert len(by_name["finish"]) == n
+    assert len(by_name["route"]) == n
+    assert len(by_name["balancer_split"]) == n
+    assert len(by_name["service_start"]) >= n
+    # one async request lifeline per submission, balanced
+    assert len([e for e in tracer.events if e["ph"] == "b"]) == n
+    assert len([e for e in tracer.events if e["ph"] == "e"]) == n
+
+
+def test_cancel_shows_on_trace():
+    reqs = make_trace(10, seed=0, interval=0.0)
+    service = ServeSpec(approach="cronus").build()
+    service.start_trace()
+    handles = [service.submit(r) for r in reqs]
+    handles[3].cancel()
+    service.drain()
+    cancels = [e for e in service.tracer.events if e["name"] == "cancel"]
+    assert len(cancels) == 1 and cancels[0]["args"]["req"] == "r3"
+    ends = [e for e in service.tracer.events if e["ph"] == "e"]
+    assert sum(1 for e in ends if e.get("args", {}).get("cancelled")) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: autoscaler events ride the same tracer schema
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_events_on_control_track():
+    spec = ServeSpec(approach="cronus", arrival="ramp:1:8:120",
+                     autoscale="slo:goodput>=0.9:cooldown=10",
+                     inventory="A100:1,A10:4")
+    reqs = make_trace(300, seed=0, arrival=spec.arrival,
+                      vocab_size=CFG.vocab_size)
+    service = spec.build()
+    service.start_trace()
+    OpenLoopDriver(service).run(reqs)
+    scaler = service.autoscaler
+    assert scaler.events                      # compat view still filled
+    traced = [e for e in service.tracer.events
+              if e.get("cat") == "autoscale"]
+    assert len(traced) == len(scaler.events)
+    for inst, ev in zip(traced, scaler.events):
+        assert inst["ph"] == "i"
+        assert inst["name"] == ev["action"]
+        assert inst["ts"] == pytest.approx(ev["t"] * 1e6)
+        assert inst["args"] == {k: v for k, v in ev.items()
+                                if k not in ("t", "action")}
+    # scale-ups wire the new endpoint into the tracer: its lane shows up
+    names = trace_report.track_names(service.tracer.to_chrome())
+    assert any(n.startswith("as") for n in names.values())
+
+
+def test_autoscaler_events_without_tracer_unchanged():
+    spec = ServeSpec(approach="cronus", arrival="ramp:1:8:120",
+                     autoscale="slo:goodput>=0.9:cooldown=10",
+                     inventory="A100:1,A10:4")
+    reqs = make_trace(300, seed=0, arrival=spec.arrival,
+                      vocab_size=CFG.vocab_size)
+    service = spec.build()
+    OpenLoopDriver(service).run(reqs)
+    rep = service.autoscaler.report(service.now)
+    assert rep["n_scale_ups"] >= 1 and rep["events"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: transfer stats surface through opt-in utilization
+# ---------------------------------------------------------------------------
+
+def test_transfer_stats_in_utilization_opt_in():
+    reqs = make_trace(30, seed=1, interval=1 / 8.0)
+    service = ServeSpec(approach="cronus").build()
+    base = service.run(reqs.fresh())
+    assert "utilization" not in base          # default dict untouched
+    util = service.metrics(utilization=True)["utilization"]
+    t = util["transfers"]
+    assert t["n_transfers"] > 0
+    assert any(k.startswith("tokens_") for k in t)
+    assert t["n_cancelled"] >= 0
+    # transfer-free topology: utilization keys stay exactly per-endpoint
+    lone = ServeSpec(cluster="2xworker:A10").build()
+    lone.run(make_trace(10, seed=0, interval=0.0).fresh())
+    assert "transfers" not in lone.metrics(utilization=True)["utilization"]

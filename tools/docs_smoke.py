@@ -28,7 +28,8 @@ import subprocess
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/OPERATIONS.md"]
+DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/OPERATIONS.md",
+                 "docs/OBSERVABILITY.md"]
 QUICK_OVERRIDES = ["--n-requests", "12", "--scale", "0.05"]
 
 _FENCE = re.compile(r"```bash\n(.*?)```", re.DOTALL)

@@ -1,0 +1,320 @@
+"""Trace analyzer: turn a flight-recorder trace into verified numbers.
+
+Consumes the Chrome ``trace_event`` JSON that ``serve.py --trace-out``
+writes (see docs/OBSERVABILITY.md) and computes, from the trace alone:
+
+* **overlap** — per engine lane, the fraction of migrated-prefill busy
+  time (iterations executing prefill chunks whose head ran on another
+  device and crossed the wire — the Cronus remainder) that also decoded
+  earlier requests in the same iteration. This is the paper's Figure-1
+  mechanism stated mechanically: Cronus overlaps the high-end GPU's
+  remaining prefill with decode (overlap fraction > 0), while pure
+  disaggregation serializes them (a decode-only instance runs no
+  migrated prefill chunks at all, so its fraction is 0);
+* **bubbles** — per lane, the fraction of its active span spent idle
+  between iterations (prefill bubbles on prefill-capable lanes);
+* **TTFT decomposition** — per finished request, queueing (submit →
+  first slot admission) and service (admission → last first-token
+  timestamp) from the instants alone, aggregated with the same
+  percentiles as ``aggregate(queueing=True)`` — the cross-check that
+  the trace tells the same story as the metrics (tolerance 1e-6).
+
+``--check`` validates the trace's structure (JSON shape, per-track
+monotonic timestamps, properly nested spans, every flow id pairing one
+send with one receive, async lifelines balanced); ``--min-overlap`` /
+``--max-overlap`` turn the overlap fraction into a CI assertion.
+
+Usage:
+  python tools/trace_report.py run.json [--check]
+      [--min-overlap X] [--max-overlap X] [--out report.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Optional, Tuple
+
+EPS = 1e-6     # µs-scale slack for span-nesting comparisons
+
+
+def load_events(path: str) -> List[dict]:
+    """Events from an exported trace file ({"traceEvents": [...]} or a
+    bare event list)."""
+    with open(path) as f:
+        data = json.load(f)
+    return data["traceEvents"] if isinstance(data, dict) else data
+
+
+def track_names(events: List[dict]) -> Dict[Tuple[int, int], str]:
+    """(pid, tid) -> human lane label, from the naming metadata."""
+    procs: Dict[int, str] = {}
+    threads: Dict[Tuple[int, int], str] = {}
+    for e in events:
+        if e.get("ph") != "M":
+            continue
+        if e["name"] == "process_name":
+            procs[e["pid"]] = e["args"]["name"]
+        elif e["name"] == "thread_name":
+            threads[(e["pid"], e["tid"])] = e["args"]["name"]
+    out = {}
+    for (pid, tid), thread in threads.items():
+        proc = procs.get(pid, str(pid))
+        out[(pid, tid)] = proc if thread == "main" else f"{proc}/{thread}"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# structural validation (--check)
+# ---------------------------------------------------------------------------
+
+def validate(events: List[dict]) -> List[str]:
+    """Structural problems in an exported trace (empty list = clean)."""
+    problems: List[str] = []
+    last_ts: Dict[Tuple[int, int], float] = {}
+    spans: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
+    flows: Dict[object, Dict[str, float]] = {}
+    asyncs: Dict[object, Dict[str, float]] = {}
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph is None:
+            problems.append(f"event {i}: missing 'ph'")
+            continue
+        if ph == "M":
+            continue
+        if "pid" not in e or "tid" not in e or "ts" not in e:
+            problems.append(f"event {i} ({ph}): missing pid/tid/ts")
+            continue
+        key = (e["pid"], e["tid"])
+        ts = e["ts"]
+        if ts < last_ts.get(key, float("-inf")) - EPS:
+            problems.append(
+                f"event {i} ({ph} {e.get('name')}): track {key} timestamp "
+                f"regressed {last_ts[key]:.3f} -> {ts:.3f}")
+        last_ts[key] = max(last_ts.get(key, float("-inf")), ts)
+        if ph == "X":
+            spans.setdefault(key, []).append((ts, ts + e.get("dur", 0.0)))
+        elif ph in ("s", "f"):
+            d = flows.setdefault(("flow", e.get("id")), {"s": 0, "f": 0})
+            d[ph] += 1
+            d.setdefault(f"{ph}_ts", ts)
+        elif ph in ("b", "e"):
+            d = asyncs.setdefault((e.get("cat"), e.get("id")),
+                                  {"b": 0, "e": 0})
+            d[ph] += 1
+    for key, sp in spans.items():
+        open_ends: List[float] = []     # stack of enclosing span ends
+        prev_end = float("-inf")
+        for t0, t1 in sp:               # file order = sorted by ts
+            while open_ends and t0 >= open_ends[-1] - EPS:
+                open_ends.pop()
+            if open_ends and t1 > open_ends[-1] + EPS:
+                problems.append(
+                    f"track {key}: span [{t0:.3f}, {t1:.3f}] straddles "
+                    f"its enclosing span ending {open_ends[-1]:.3f}")
+            elif not open_ends and t0 < prev_end - EPS:
+                problems.append(
+                    f"track {key}: span [{t0:.3f}, {t1:.3f}] overlaps the "
+                    f"previous top-level span ending {prev_end:.3f}")
+            open_ends.append(t1)
+            prev_end = max(prev_end, t1)
+    for (_, fid), d in flows.items():
+        if d["s"] != 1 or d["f"] != 1:
+            problems.append(f"flow id {fid}: {d['s']} start(s) / "
+                            f"{d['f']} end(s), expected exactly 1 + 1")
+        elif d["f_ts"] < d["s_ts"] - EPS:
+            problems.append(f"flow id {fid}: receive at {d['f_ts']:.3f} "
+                            f"precedes send at {d['s_ts']:.3f}")
+    for (cat, ident), d in asyncs.items():
+        if d["b"] != 1 or d["e"] != 1:
+            problems.append(f"async {cat}:{ident}: {d['b']} begin(s) / "
+                            f"{d['e']} end(s), expected exactly 1 + 1")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# overlap + bubbles (the paper's Figure-1 mechanism)
+# ---------------------------------------------------------------------------
+
+def overlap_report(events: List[dict]) -> Dict:
+    """Per-lane and total migrated-prefill/decode overlap fractions."""
+    names = track_names(events)
+    per: Dict[str, Dict[str, float]] = {}
+    for e in events:
+        if e.get("ph") != "X" or e.get("name") != "iter":
+            continue
+        args = e.get("args", {})
+        if args.get("migrated_prefill_tokens", 0) <= 0:
+            continue
+        label = names.get((e["pid"], e["tid"]), str((e["pid"], e["tid"])))
+        d = per.setdefault(label, {"migrated_busy_s": 0.0,
+                                   "overlapped_s": 0.0})
+        dur = e.get("dur", 0.0) / 1e6
+        d["migrated_busy_s"] += dur
+        if args.get("n_decode", 0) > 0:
+            d["overlapped_s"] += dur
+    total_m = sum(d["migrated_busy_s"] for d in per.values())
+    total_o = sum(d["overlapped_s"] for d in per.values())
+    for d in per.values():
+        d["overlap_frac"] = (d["overlapped_s"] / d["migrated_busy_s"]
+                             if d["migrated_busy_s"] > 0 else 0.0)
+    return {"per_track": per,
+            "migrated_busy_s": total_m,
+            "overlapped_s": total_o,
+            "overlap_frac": total_o / total_m if total_m > 0 else 0.0}
+
+
+def bubble_report(events: List[dict]) -> Dict[str, Dict[str, float]]:
+    """Per-lane idle fraction: 1 - busy/span over its iteration spans."""
+    names = track_names(events)
+    acc: Dict[str, List[float]] = {}
+    for e in events:
+        if e.get("ph") != "X" or e.get("name") != "iter":
+            continue
+        label = names.get((e["pid"], e["tid"]), str((e["pid"], e["tid"])))
+        t0, t1 = e["ts"] / 1e6, (e["ts"] + e.get("dur", 0.0)) / 1e6
+        cur = acc.setdefault(label, [t0, t1, 0.0, 0])
+        cur[0] = min(cur[0], t0)
+        cur[1] = max(cur[1], t1)
+        cur[2] += t1 - t0
+        cur[3] += 1
+    out = {}
+    for label, (t0, t1, busy, n) in acc.items():
+        span = t1 - t0
+        out[label] = {
+            "span_s": span,
+            "busy_s": busy,
+            "bubble_frac": max(0.0, 1.0 - busy / span) if span > 0 else 0.0,
+            "n_iterations": n,
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TTFT decomposition (cross-checked against aggregate(queueing=True))
+# ---------------------------------------------------------------------------
+
+def _percentile(values: List[float], p: float) -> float:
+    # numpy's linear-interpolation percentile, to match
+    # repro.core.metrics.percentile exactly
+    import numpy as np
+    if not values:
+        return float("nan")
+    return float(np.percentile(np.asarray(values), p))
+
+
+def ttft_decomposition(events: List[dict]) -> Dict[str, float]:
+    """Queueing/service split of TTFT from the instants alone, with the
+    exact keys/percentiles of ``aggregate(queueing=True)`` — plus the
+    informational per-request KV-transfer wire time."""
+    submit: Dict[str, float] = {}
+    service_start: Dict[str, float] = {}
+    first_token: Dict[str, float] = {}
+    wire: Dict[str, float] = {}
+    finished, cancelled = set(), set()
+    for e in events:
+        if e.get("ph") != "i":
+            continue
+        name = e.get("name")
+        req = e.get("args", {}).get("req")
+        if req is None:
+            continue
+        ts = e["ts"] / 1e6
+        if name == "submit":
+            submit.setdefault(req, ts)
+        elif name == "service_start":
+            # the metric records only the FIRST admission anywhere
+            service_start.setdefault(req, ts)
+        elif name == "first_token":
+            # later assignments overwrite (the CPI supersedes the PPI
+            # view's timestamp); file order is ts-sorted and stable, so
+            # the last occurrence is the final metric
+            first_token[req] = ts
+        elif name == "kv_ingest":
+            wire[req] = wire.get(req, 0.0) + e["args"].get("wire_s", 0.0)
+        elif name == "finish":
+            finished.add(req)
+        elif name == "cancel":
+            cancelled.add(req)
+    done = sorted(finished - cancelled)
+    qs = [service_start[r] - submit[r] for r in done
+          if r in service_start and r in submit]
+    svc = [first_token[r] - service_start[r] for r in done
+           if r in first_token and r in service_start]
+    wires = [wire[r] for r in done if r in wire]
+    return {
+        "n_finished": len(done),
+        "queueing_p50": _percentile(qs, 50),
+        "queueing_p99": _percentile(qs, 99),
+        "ttft_service_p99": _percentile(svc, 99),
+        "transfer_wire_p50": _percentile(wires, 50) if wires else 0.0,
+        "transfer_wire_p99": _percentile(wires, 99) if wires else 0.0,
+        "n_with_transfer": len(wires),
+    }
+
+
+def report(events: List[dict]) -> Dict:
+    """The full analysis bundle as one JSON-ready dict."""
+    return {
+        "n_events": len(events),
+        "overlap": overlap_report(events),
+        "bubbles": bubble_report(events),
+        "ttft": ttft_decomposition(events),
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome JSON from serve.py --trace-out")
+    ap.add_argument("--check", action="store_true",
+                    help="validate trace structure (spans nested, "
+                         "per-track monotonic timestamps, flows paired); "
+                         "non-zero exit on problems")
+    ap.add_argument("--min-overlap", type=float, default=None, metavar="X",
+                    help="fail unless total overlap fraction >= X "
+                         "(CI: cronus must overlap)")
+    ap.add_argument("--max-overlap", type=float, default=None, metavar="X",
+                    help="fail unless total overlap fraction <= X "
+                         "(CI: pure disaggregation must not)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="write the report JSON here too")
+    args = ap.parse_args(argv)
+
+    try:
+        events = load_events(args.trace)
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        print(f"bad trace: {e}", file=sys.stderr)
+        return 1
+
+    if args.check:
+        problems = validate(events)
+        if problems:
+            print(f"FAIL: {len(problems)} structural problem(s):",
+                  file=sys.stderr)
+            for p in problems[:50]:
+                print(f"  - {p}", file=sys.stderr)
+            return 1
+        print(f"check OK: {len(events)} events structurally valid")
+
+    rep = report(events)
+    print(json.dumps(rep, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=2)
+
+    frac = rep["overlap"]["overlap_frac"]
+    if args.min_overlap is not None and not (frac >= args.min_overlap
+                                             and not math.isnan(frac)):
+        print(f"FAIL: overlap fraction {frac:.4f} < required "
+              f"{args.min_overlap}", file=sys.stderr)
+        return 2
+    if args.max_overlap is not None and not (frac <= args.max_overlap):
+        print(f"FAIL: overlap fraction {frac:.4f} > allowed "
+              f"{args.max_overlap}", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
